@@ -1,0 +1,58 @@
+"""Kernel micro-bench: interpret-mode correctness deltas + XLA-reference
+timings on CPU (real TPU timings are out of scope in this container — the
+roofline analysis covers the performance story)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(f, n=3):
+    jax.block_until_ready(f())
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(f())
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run() -> list[str]:
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, S, H, D = 2, 256, 4, 64
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    ref_fn = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, True))
+    us = _time(lambda: ref_fn(q, k, v))
+    out = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    err = float(jnp.abs(out - ref.flash_attention_ref(q, k, v, True)).max())
+    rows.append(f"kernel_flash_attention,{us:.0f},"
+                f"interpret_vs_oracle_maxerr={err:.2e};shape={B}x{S}x{H}x{D}")
+
+    b, L, Hs, P, N = 2, 128, 8, 32, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 6)
+    x = jax.random.normal(ks[0], (b, L, Hs, P))
+    Bm = jax.random.normal(ks[1], (b, L, N)) * 0.5
+    Cm = jax.random.normal(ks[2], (b, L, N)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (b, L, Hs))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[4], (Hs,)) * 0.3)
+    Dm = jax.random.normal(ks[5], (Hs,))
+    ref_fn = jax.jit(lambda *a: ref.ssd_ref(*a)[0])
+    us = _time(lambda: ref_fn(x, Bm, Cm, dt, A, Dm))
+    y = ops.ssd_scan(x, Bm, Cm, dt, A, Dm, chunk=32, interpret=True)
+    err = float(jnp.abs(y - ref.ssd_ref(x, Bm, Cm, dt, A, Dm)[0]).max())
+    rows.append(f"kernel_ssd_scan,{us:.0f},"
+                f"interpret_vs_oracle_maxerr={err:.2e};shape={b}x{L}x{Hs}x{P}")
+
+    xw = jax.random.normal(jax.random.PRNGKey(2), (1024, 512))
+    w = jax.random.normal(jax.random.PRNGKey(3), (512,))
+    ref_fn = jax.jit(lambda x, w: ref.rmsnorm_ref(x, w))
+    us = _time(lambda: ref_fn(xw, w))
+    err = float(jnp.abs(ops.rmsnorm(xw, w, interpret=True)
+                        - ref.rmsnorm_ref(xw, w)).max())
+    rows.append(f"kernel_rmsnorm,{us:.0f},interpret_vs_oracle_maxerr={err:.2e}")
+    return rows

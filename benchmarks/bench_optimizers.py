@@ -1,0 +1,51 @@
+"""Placement-optimizer comparison (paper §2 tractability: the problems are
+NP-hard, so the deliverable is heuristic quality-vs-time) on a geo fleet."""
+
+import time
+
+import numpy as np
+
+from repro.core import (CostConfig, DQCoupling, ExplicitFleet,
+                        PlacementProblem, greedy_transfer, projected_gradient,
+                        random_dag, random_search, simulated_annealing,
+                        uniform_placement)
+
+
+def _instance(seed=0, n_ops=8, n_dev=8, n_regions=3):
+    rng = np.random.default_rng(seed)
+    g = random_dag(n_ops, 0.4, rng)
+    region = rng.integers(0, n_regions, n_dev)
+    base = rng.uniform(1.0, 3.0, (n_regions, n_regions))
+    base = (base + base.T) / 2
+    com = base[np.ix_(region, region)] + rng.uniform(0, 0.1, (n_dev, n_dev))
+    com = (com + com.T) / 2
+    np.fill_diagonal(com, 0.0)
+    fleet = ExplicitFleet(com_cost=com)
+    dq = DQCoupling(cap0=np.full(n_dev, 1.6 * n_ops / n_dev),
+                    load=np.full(n_dev, 0.1))
+    return PlacementProblem(g, fleet, CostConfig(alpha=0.005), beta=1.0,
+                            dq=dq)
+
+
+def run() -> list[str]:
+    prob = _instance()
+    rng = np.random.default_rng(1)
+    uni_F = prob.score(uniform_placement(prob.graph.n_ops,
+                                         prob.availability()), 0.0)
+    rows = [f"optimizer_uniform_baseline,0.0,F={uni_F:.4f}"]
+    for name, fn in [
+        ("greedy", lambda: greedy_transfer(prob)),
+        ("simulated_annealing", lambda: simulated_annealing(prob, rng,
+                                                            steps=3000)),
+        ("projected_gradient", lambda: projected_gradient(prob, steps=200)),
+        ("random_search", lambda: random_search(prob, rng,
+                                                n_candidates=1024)),
+    ]:
+        t0 = time.perf_counter()
+        res = fn()
+        dt = (time.perf_counter() - t0) * 1e6
+        rows.append(
+            f"optimizer_{name},{dt:.0f},F={res.F:.4f};dq={res.dq_fraction:.2f};"
+            f"improvement_vs_uniform={(uni_F - res.F) / uni_F:.1%};"
+            f"evals={res.evals}")
+    return rows

@@ -1,0 +1,44 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (baseline, single-pod — per the assignment
+the roofline table is single-pod; multi-pod rows are reported in §Dry-run)
+and emits one row per cell with the three terms, dominant bottleneck, and
+MODEL_FLOPS/HLO_FLOPs."""
+
+import json
+from pathlib import Path
+
+_EXP = Path(__file__).resolve().parents[1] / "experiments"
+DRYRUN_DIR = (_EXP / "dryrun_final") if (_EXP / "dryrun_final").exists() \
+    else (_EXP / "dryrun")
+
+
+def load_records(mesh: str = "single", variant: str = "baseline"):
+    recs = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("skipped"):
+            continue
+        if r.get("mesh") != mesh or r.get("variant") != variant:
+            continue
+        recs.append(r)
+    return recs
+
+
+def run() -> list[str]:
+    recs = load_records()
+    if not recs:
+        return ["roofline_table,0.0,no dry-run artifacts — run "
+                "python -m repro.launch.dryrun --sweep first"]
+    rows = []
+    for r in recs:
+        rf = r["roofline"]
+        rows.append(
+            f"roofline_{r['arch']}_{r['shape']},0.0,"
+            f"compute_s={rf['compute_s']:.4f};memory_s={rf['memory_s']:.4f};"
+            f"collective_s={rf['collective_s']:.4f};dom={rf['dominant']};"
+            f"useful={rf['useful_fraction']:.3f};"
+            f"mfu_bound={rf['mfu_bound']:.4f};"
+            f"peakGB={r['memory']['peak_bytes'] / 1e9:.2f};"
+            f"fits={r['memory']['fits_16GB']}")
+    return rows

@@ -1,0 +1,54 @@
+"""Massive-parallelism scaling of the cost model itself: evaluation
+latency vs (operators × devices), explicit vs region-structured fleets —
+the paper's fleet sizes (10⁵ devices) must be scorable interactively for
+any optimizer to work at that scale."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (RegionFleet, ExplicitFleet, latency, make_latency_fn,
+                        random_dag, random_placement)
+
+
+def _time(f, n=5):
+    f()  # warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        f()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def _time_once(f):
+    t0 = time.perf_counter()
+    f()
+    return (time.perf_counter() - t0) * 1e6
+
+
+def run() -> list[str]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for n_ops, n_dev in [(10, 256), (20, 4096), (50, 65536)]:
+        g = random_dag(n_ops, 0.3, rng)
+        n_regions = max(n_dev // 256, 1)
+        region = np.repeat(np.arange(n_regions), n_dev // n_regions)
+        inter = rng.uniform(0.5, 2.0, (n_regions, n_regions))
+        inter = (inter + inter.T) / 2
+        fleet = RegionFleet(region=region, inter=inter)
+        x = random_placement(n_ops, np.ones((n_ops, n_dev), bool), rng,
+                             sparsity=0.9)
+        us_np = (_time_once(lambda: latency(g, fleet, x)) if n_dev > 10000
+                 else _time(lambda: latency(g, fleet, x)))
+        lat_fn = jax.jit(make_latency_fn(g, fleet))
+        xj = jnp.asarray(x)
+        us_jax = _time(lambda: float(lat_fn(xj)))
+        # batched candidate scoring (what the optimizers lean on)
+        batched = jax.jit(jax.vmap(make_latency_fn(g, fleet)))
+        xs = jnp.asarray(np.stack([x] * 32))
+        us_batch = _time(lambda: np.asarray(batched(xs)).sum()) / 32
+        rows.append(
+            f"costmodel_scaling_ops{n_ops}_dev{n_dev},{us_np:.1f},"
+            f"jax_us={us_jax:.1f};batched_per_candidate_us={us_batch:.1f}")
+    return rows

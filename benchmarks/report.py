@@ -1,0 +1,81 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run JSON artifacts.
+
+  PYTHONPATH=src python -m benchmarks.report [--dir experiments/dryrun]
+prints markdown to stdout (EXPERIMENTS.md embeds the output).
+"""
+
+import argparse
+import json
+from pathlib import Path
+
+
+def load(dir_path, mesh=None, variant="baseline"):
+    recs = []
+    for p in sorted(Path(dir_path).glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("skipped"):
+            continue
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if variant and r.get("variant") != variant:
+            continue
+        recs.append(r)
+    return recs
+
+
+def dryrun_table(recs) -> str:
+    out = ["| cell | mesh | chips | compile s | peak GB/chip | fits 16GB | "
+           "HLO GFLOP/chip | wire GB/chip | collectives |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        m = r["memory"]
+        c = r["collectives"]
+        counts = "+".join(f"{k.split('-')[-1]}:{v}"
+                          for k, v in sorted(c["counts"].items()))
+        out.append(
+            f"| {r['arch']}/{r['shape']} | {r['mesh']} | {r['chips']} "
+            f"| {r.get('compile_s', 0):.0f} "
+            f"| {m['peak_bytes'] / 1e9:.2f} "
+            f"| {'Y' if m['peak_bytes'] < 16 * 2**30 else 'N'} "
+            f"| {r['hlo_flops_per_device'] / 1e9:,.0f} "
+            f"| {c['total_wire_bytes'] / 1e9:.1f} | {counts} |")
+    return "\n".join(out)
+
+
+def roofline_table(recs) -> str:
+    out = ["| cell | compute s | memory s (xla / tpu-adj) | collective s "
+           "(xla / tpu-adj) | dominant | MODEL/HLO flops | mfu bound "
+           "(tpu-adj) |",
+           "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        rf = r["roofline"]
+        ka = r.get("kernel_adjusted", {})
+        mfu = r.get("mfu_bound_tpu_adjusted", rf.get("mfu_bound", 0))
+        out.append(
+            f"| {r['arch']}/{r['shape']} | {rf['compute_s']:.4f} "
+            f"| {rf['memory_s']:.3f} / {ka.get('memory_s', rf['memory_s']):.3f} "
+            f"| {rf['collective_s']:.3f} / "
+            f"{ka.get('collective_s', rf['collective_s']):.3f} "
+            f"| {rf['dominant']} | {rf['useful_fraction']:.3f} "
+            f"| {mfu:.4f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+    single = load(args.dir, mesh="single", variant=args.variant)
+    multi = load(args.dir, mesh="multi", variant=args.variant)
+    print("### Dry-run (single pod, 256 chips)\n")
+    print(dryrun_table(single))
+    print("\n### Dry-run (multi-pod, 2×256 = 512 chips)\n")
+    print(dryrun_table(multi))
+    print("\n### Roofline (single pod)\n")
+    print(roofline_table(single))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from repro.configs.registry import (
+    ALIASES, ARCH_IDS, SHAPES, Shape, get_config, get_smoke_config,
+    runnable_cells, shape_skip_reason, skipped_cells,
+)
+
+__all__ = ["ALIASES", "ARCH_IDS", "SHAPES", "Shape", "get_config",
+           "get_smoke_config", "runnable_cells", "shape_skip_reason",
+           "skipped_cells"]

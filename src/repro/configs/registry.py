@@ -1,0 +1,91 @@
+"""Architecture & shape registry (assigned pool, see DESIGN.md §4).
+
+Each ``src/repro/configs/<arch>.py`` defines ``CONFIG`` (exact published
+dims) and ``SMOKE`` (reduced same-family config for CPU tests).  The four
+assigned input shapes are global; ``runnable_cells()`` applies the skip
+rules (long_500k ⇒ sub-quadratic archs only).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models.api import ModelConfig
+
+ARCH_IDS = [
+    "olmo_1b",
+    "granite_8b",
+    "deepseek_coder_33b",
+    "qwen3_32b",
+    "mamba2_1_3b",
+    "arctic_480b",
+    "grok_1_314b",
+    "zamba2_1_2b",
+    "llama_3_2_vision_11b",
+    "whisper_large_v3",
+]
+
+# CLI-friendly aliases (--arch olmo-1b etc.)
+ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def canonical_arch(arch: str) -> str:
+    return arch.lower().replace(".", "_").replace("-", "_")
+
+
+def get_config(arch: str) -> ModelConfig:
+    arch = canonical_arch(arch)
+    if arch not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ALIASES)}")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical_arch(arch)}")
+    return mod.SMOKE
+
+
+def shape_skip_reason(cfg: ModelConfig, shape: Shape) -> str | None:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("long_500k requires sub-quadratic sequence mixing; "
+                f"{cfg.name} is pure full-attention (skip noted in DESIGN.md)")
+    return None
+
+
+def runnable_cells() -> list[tuple[str, str]]:
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            if shape_skip_reason(cfg, shape) is None:
+                cells.append((arch, sname))
+    return cells
+
+
+def skipped_cells() -> list[tuple[str, str, str]]:
+    out = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            r = shape_skip_reason(cfg, shape)
+            if r:
+                out.append((arch, sname, r))
+    return out

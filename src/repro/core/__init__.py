@@ -1,0 +1,43 @@
+"""The paper's primary contribution: the data-quality-aware cost model for
+geo-distributed massively parallel streaming analytics (§3), its optimizers,
+and its calibration against compiled TPU artifacts."""
+
+from repro.core.costmodel import (
+    CostConfig,
+    edge_latency,
+    enabled_links,
+    latency,
+    latency_via_paths,
+    network_movement,
+    objective_F,
+)
+from repro.core.devices import ExplicitFleet, RegionFleet, fleet_from_tpu_mesh
+from repro.core.graph import Operator, OpGraph, diamond_graph, linear_graph, random_dag
+from repro.core.jaxmodel import SmoothConfig, make_latency_fn, make_objective_fn
+from repro.core.optimizers import (
+    DQCoupling,
+    OptResult,
+    PlacementProblem,
+    exhaustive_search,
+    greedy_transfer,
+    projected_gradient,
+    random_search,
+    simulated_annealing,
+)
+from repro.core.placement import (
+    random_placement,
+    uniform_placement,
+    validate_placement,
+)
+
+__all__ = [
+    "CostConfig", "edge_latency", "enabled_links", "latency",
+    "latency_via_paths", "network_movement", "objective_F",
+    "ExplicitFleet", "RegionFleet", "fleet_from_tpu_mesh",
+    "Operator", "OpGraph", "diamond_graph", "linear_graph", "random_dag",
+    "SmoothConfig", "make_latency_fn", "make_objective_fn",
+    "DQCoupling", "OptResult", "PlacementProblem", "exhaustive_search",
+    "greedy_transfer", "projected_gradient", "random_search",
+    "simulated_annealing", "random_placement", "uniform_placement",
+    "validate_placement",
+]

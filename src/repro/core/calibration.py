@@ -1,0 +1,78 @@
+"""Calibrating the cost model from compiled artifacts (DESIGN.md §2).
+
+The paper obtains operator/link metadata by profiling; on TPU we get the same
+inputs *statically*: collective traffic from post-SPMD HLO, per-stage compute
+from ``cost_analysis()``, link costs from the mesh topology.  The functions
+here turn a dry-run artifact into cost-model inputs so placement decisions
+price the topology the compiler actually emitted.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.devices import DCI_GBPS, ICI_GBPS, RegionFleet, fleet_from_tpu_mesh
+from repro.core.graph import Operator, OpGraph
+from repro.perf.hlo import CollectiveStats, parse_collectives
+
+__all__ = ["CalibratedCosts", "calibrate_from_hlo", "stage_graph_for_lm"]
+
+
+@dataclasses.dataclass
+class CalibratedCosts:
+    """comCost units: seconds per byte; work units: flop."""
+
+    fleet: RegionFleet
+    collectives: CollectiveStats
+    bytes_per_step: float  # per-device collective wire bytes
+    flops_per_step: float  # per-device HLO flops
+
+    def step_comm_seconds(self, link_gbps: float = ICI_GBPS) -> float:
+        return self.bytes_per_step / (link_gbps * 1e9)
+
+
+def calibrate_from_hlo(hlo_text: str, flops_per_device: float,
+                       n_pods: int = 1, chips_per_pod: int = 256) -> CalibratedCosts:
+    stats = parse_collectives(hlo_text)
+    fleet = fleet_from_tpu_mesh(n_pods=n_pods, chips_per_pod=chips_per_pod,
+                                unit_bytes=1.0)
+    return CalibratedCosts(
+        fleet=fleet,
+        collectives=stats,
+        bytes_per_step=stats.total_wire_bytes,
+        flops_per_step=flops_per_device,
+    )
+
+
+def stage_graph_for_lm(n_layers: int, d_model: int, d_ff: int, vocab: int,
+                       seq: int, batch: int, moe_experts: int = 0,
+                       top_k: int = 2) -> OpGraph:
+    """The train-step dataflow as a paper OpGraph.
+
+    Operators are stages (embed → L×block → head → loss → backward echo);
+    selectivity is the bytes-amplification between stages — this is the graph
+    auto-sharding scores candidate placements against.  Tuple unit = one
+    token's activation row (d_model × 2 bytes bf16).
+    """
+    tok_bytes = 2.0 * d_model
+    ops = [Operator("source", selectivity=1.0, out_bytes=4.0)]  # token ids
+    ops.append(Operator("embed", selectivity=1.0, out_bytes=tok_bytes))
+    edges = [(0, 1)]
+    prev = 1
+    for l in range(n_layers):
+        amp = 1.0
+        if moe_experts:
+            # top-k dispatch duplicates tokens k× on the expert axis
+            amp = float(top_k)
+        ops.append(Operator(f"block{l}", selectivity=amp, out_bytes=tok_bytes,
+                            work=1.0))
+        edges.append((prev, len(ops) - 1))
+        prev = len(ops) - 1
+    ops.append(Operator("head", selectivity=vocab / d_model,
+                        out_bytes=2.0 * vocab, work=1.0))
+    edges.append((prev, len(ops) - 1))
+    ops.append(Operator("loss", selectivity=1.0 / vocab, out_bytes=4.0))
+    edges.append((len(ops) - 2, len(ops) - 1))
+    return OpGraph(ops, edges)

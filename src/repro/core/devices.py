@@ -1,0 +1,181 @@
+"""Device fleets: heterogeneous, geo-distributed compute nodes (paper ``ED``).
+
+Two concrete fleets:
+
+* :class:`ExplicitFleet` — dense ``comCost_{u,v}`` matrix, exactly the paper's
+  Table 3 input.  Fine up to a few thousand devices.
+* :class:`RegionFleet` — devices grouped into regions (pods / datacenters);
+  ``comCost_{u,v} = intra[r]`` if same region else ``inter[r_u, r_v]``.  The
+  cost model exploits this structure so evaluation scales to fleets of 10⁵+
+  devices (the paper's "massive parallelism" at fleet level) without ever
+  materializing the V×V matrix.
+
+``fleet_from_tpu_mesh`` builds a RegionFleet whose link costs mirror the TPU
+production mesh (ICI within a pod, DCI between pods) so placement decisions
+price the same topology the dry-run compiles against (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "ExplicitFleet",
+    "RegionFleet",
+    "fleet_from_tpu_mesh",
+    "ICI_GBPS",
+    "DCI_GBPS",
+    "HBM_GBPS",
+    "PEAK_BF16_TFLOPS",
+]
+
+# TPU v5e hardware constants (per task spec; used by roofline + calibration).
+PEAK_BF16_TFLOPS = 197.0  # per chip
+HBM_GBPS = 819.0  # per chip
+ICI_GBPS = 50.0  # per link
+DCI_GBPS = 6.25  # assumed inter-pod (geo) link per chip-pair — the slow WAN tier
+
+
+@dataclasses.dataclass
+class ExplicitFleet:
+    """Paper-faithful fleet: dense pairwise communication cost matrix.
+
+    Attributes:
+      com_cost: (V, V) — ``comCost_{u,v}``, time per unit data sent u→v.
+        Diagonal is normally 0 (local data stays local).
+      speed: (V,) relative compute speed (1.0 = nominal).  Only used by the
+        compute-cost *extension*; the paper-faithful model ignores it.
+      available: (n_ops, V) boolean — paper's ``available_{i,u}``; or None
+        meaning every operator may run anywhere.
+      region: (V,) int region id per device (informational here).
+    """
+
+    com_cost: np.ndarray
+    speed: np.ndarray | None = None
+    available: np.ndarray | None = None
+    region: np.ndarray | None = None
+
+    def __post_init__(self):
+        self.com_cost = np.asarray(self.com_cost, dtype=np.float64)
+        if self.com_cost.ndim != 2 or self.com_cost.shape[0] != self.com_cost.shape[1]:
+            raise ValueError(f"com_cost must be square, got {self.com_cost.shape}")
+        v = self.com_cost.shape[0]
+        if self.speed is None:
+            self.speed = np.ones(v, dtype=np.float64)
+        self.speed = np.asarray(self.speed, dtype=np.float64)
+        if self.region is None:
+            self.region = np.zeros(v, dtype=np.int64)
+
+    @property
+    def n_devices(self) -> int:
+        return self.com_cost.shape[0]
+
+    def availability(self, n_ops: int) -> np.ndarray:
+        if self.available is None:
+            return np.ones((n_ops, self.n_devices), dtype=bool)
+        a = np.asarray(self.available, dtype=bool)
+        if a.shape != (n_ops, self.n_devices):
+            raise ValueError(
+                f"available has shape {a.shape}, want {(n_ops, self.n_devices)}")
+        return a
+
+    def com_matrix(self) -> np.ndarray:
+        return self.com_cost
+
+    def degrade_device(self, u: int, factor: float) -> "ExplicitFleet":
+        """Model a straggler: all links touching ``u`` get ``factor``× slower
+        and its compute speed drops by the same factor (runtime mitigation
+        re-optimizes placement against the degraded fleet)."""
+        c = self.com_cost.copy()
+        c[u, :] *= factor
+        c[:, u] *= factor
+        np.fill_diagonal(c, np.diag(self.com_cost))
+        s = self.speed.copy()
+        s[u] /= factor
+        return dataclasses.replace(self, com_cost=c, speed=s)
+
+    def without_devices(self, dead: list[int]) -> tuple["ExplicitFleet", np.ndarray]:
+        """Elastic down-scale: drop failed devices; returns (fleet, keep_idx)."""
+        keep = np.array([u for u in range(self.n_devices) if u not in set(dead)])
+        avail = None
+        if self.available is not None:
+            avail = np.asarray(self.available)[:, keep]
+        return (
+            ExplicitFleet(
+                com_cost=self.com_cost[np.ix_(keep, keep)],
+                speed=self.speed[keep],
+                available=avail,
+                region=self.region[keep],
+            ),
+            keep,
+        )
+
+
+@dataclasses.dataclass
+class RegionFleet:
+    """Region-structured fleet for massive device counts.
+
+    ``comCost_{u,v} = inter[region_u, region_v]`` for ``u != v`` and
+    ``intra_self`` (default 0) for ``u == v``.  Devices in the same region use
+    the diagonal of ``inter`` (the intra-region link cost).
+    """
+
+    region: np.ndarray  # (V,) int region ids in [0, R)
+    inter: np.ndarray  # (R, R) link cost between regions; diagonal = intra-region
+    self_cost: float = 0.0  # u == v
+    speed: np.ndarray | None = None
+    available: np.ndarray | None = None
+
+    def __post_init__(self):
+        self.region = np.asarray(self.region, dtype=np.int64)
+        self.inter = np.asarray(self.inter, dtype=np.float64)
+        if self.speed is None:
+            self.speed = np.ones(self.n_devices, dtype=np.float64)
+
+    @property
+    def n_devices(self) -> int:
+        return self.region.shape[0]
+
+    @property
+    def n_regions(self) -> int:
+        return self.inter.shape[0]
+
+    def availability(self, n_ops: int) -> np.ndarray:
+        if self.available is None:
+            return np.ones((n_ops, self.n_devices), dtype=bool)
+        return np.asarray(self.available, dtype=bool)
+
+    def com_matrix(self) -> np.ndarray:
+        """Materialize the dense matrix (tests / small fleets only)."""
+        c = self.inter[np.ix_(self.region, self.region)].copy()
+        np.fill_diagonal(c, self.self_cost)
+        return c
+
+    def region_masses(self, x_row: np.ndarray) -> np.ndarray:
+        """Σ_{v ∈ region r} x_v — the aggregation the structured model uses."""
+        r = np.zeros(self.n_regions, dtype=x_row.dtype)
+        np.add.at(r, self.region, x_row)
+        return r
+
+
+def fleet_from_tpu_mesh(
+    n_pods: int = 1,
+    chips_per_pod: int = 256,
+    ici_gbps: float = ICI_GBPS,
+    dci_gbps: float = DCI_GBPS,
+    unit_bytes: float = 1e9,
+) -> RegionFleet:
+    """RegionFleet mirroring the production mesh: pods are regions.
+
+    ``comCost`` is seconds per ``unit_bytes`` over the relevant link class:
+    intra-pod traffic rides ICI, inter-pod traffic rides the slow DCI tier —
+    the paper's geo-distribution heterogeneity, instantiated for TPU fleets.
+    """
+    region = np.repeat(np.arange(n_pods), chips_per_pod)
+    intra = unit_bytes / (ici_gbps * 1e9)
+    inter_cost = unit_bytes / (dci_gbps * 1e9)
+    inter = np.full((n_pods, n_pods), inter_cost)
+    np.fill_diagonal(inter, intra)
+    return RegionFleet(region=region, inter=inter, self_cost=0.0)

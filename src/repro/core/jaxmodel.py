@@ -1,0 +1,124 @@
+"""Differentiable / vectorized JAX twin of the paper cost model.
+
+Why a twin: the paper's optimization problems are NP-hard ILPs (§2.3.2);
+practical instruments are heuristics.  Because the cost model is a chain of
+matmuls + maxes, writing it in JAX gives us (a) a *projected-gradient*
+placement optimizer via autodiff over a temperature-smoothed latency
+(beyond-paper, see optimizers.py), and (b) vectorized batch scoring of
+thousands of candidate placements at once (`vmap`) for the SA/greedy search
+and the massive-parallelism scaling bench.
+
+Hard mode (``temp=0``) matches :mod:`repro.core.costmodel` to float32
+precision — asserted by property tests.
+
+The graph structure is static Python; only ``x`` (and optionally the com
+matrix) are traced, so every builder here returns a jit-compatible closure.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.devices import ExplicitFleet, RegionFleet
+from repro.core.graph import OpGraph
+
+__all__ = ["SmoothConfig", "make_latency_fn", "make_objective_fn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SmoothConfig:
+    """temp=0 ⇒ hard max (paper-exact); temp>0 ⇒ logsumexp smoothing.
+    link_eps smooths the enabledLinks indicator: nz(x) ≈ x/(x+eps)."""
+
+    alpha: float = 0.0
+    temp: float = 0.0
+    link_eps: float = 1e-4
+
+
+def _smax(v: jnp.ndarray, temp: float, axis=None) -> jnp.ndarray:
+    if temp <= 0.0:
+        return jnp.max(v, axis=axis)
+    return temp * jax.nn.logsumexp(v / temp, axis=axis)
+
+
+def _soft_nz(x: jnp.ndarray, eps: float, hard: bool) -> jnp.ndarray:
+    if hard:
+        return (x > 0).astype(x.dtype)
+    return x / (x + eps)
+
+
+def _edge_latency(x_i, x_j, s_i, com_times, cfg: SmoothConfig):
+    per_u = x_i * s_i * com_times(x_j)
+    base = _smax(per_u, cfg.temp)
+    if cfg.alpha:
+        nz_i = _soft_nz(x_i, cfg.link_eps, cfg.temp <= 0.0)
+        nz_j = _soft_nz(x_j, cfg.link_eps, cfg.temp <= 0.0)
+        links = nz_i.sum() * nz_j.sum() - (nz_i * nz_j).sum()
+        base = base + cfg.alpha * links
+    return base
+
+
+def make_latency_fn(graph: OpGraph, fleet: ExplicitFleet | RegionFleet,
+                    cfg: SmoothConfig = SmoothConfig()):
+    """Returns jit'able ``lat(x) -> scalar`` for (n_ops, V) placements.
+
+    The critical-path DP is unrolled over the (static) topo order; with
+    temp>0 the max over parents is also smoothed so the whole objective is
+    C¹ — suitable for jax.grad.
+    """
+    sel = [op.selectivity for op in graph.operators]
+
+    if isinstance(fleet, RegionFleet):
+        region = jnp.asarray(fleet.region)
+        # index in numpy BEFORE tracing: a traced inter[region] gather gets
+        # constant-folded per edge — minutes of XLA time at 10⁵ devices
+        inter_dev = jnp.asarray(fleet.inter[fleet.region])  # (V, R)
+        diag = jnp.asarray(np.diag(fleet.inter)[fleet.region])
+        self_cost = fleet.self_cost
+
+        def com_times(x_j):
+            mass = jax.ops.segment_sum(x_j, region, num_segments=fleet.n_regions)
+            return inter_dev @ mass + (self_cost - diag) * x_j
+    else:
+        com = jnp.asarray(fleet.com_cost)
+
+        def com_times(x_j):
+            return com @ x_j
+
+    def lat(x: jnp.ndarray) -> jnp.ndarray:
+        elat = {}
+        for e, (i, j) in enumerate(graph.edges):
+            elat[e] = _edge_latency(x[i], x[j], sel[i], com_times, cfg)
+        dist: dict[int, jnp.ndarray] = {}
+        zero = jnp.asarray(0.0, dtype=x.dtype)
+        for i in graph.topo_order:
+            incoming = [dist[ip] + elat[e] for ip, e in graph.in_edges(i)]
+            if incoming:
+                dist[i] = _smax(jnp.stack(incoming), cfg.temp, axis=0)
+            else:
+                dist[i] = zero
+        sinks = [dist[s] for s in graph.sinks]
+        return _smax(jnp.stack(sinks), cfg.temp, axis=0) if sinks else zero
+
+    return lat
+
+
+def make_objective_fn(graph: OpGraph, fleet: ExplicitFleet | RegionFleet,
+                      beta: float, cfg: SmoothConfig = SmoothConfig()):
+    """``obj(x, dq_fraction) -> F`` (paper eq. 8), differentiable in both."""
+    lat = make_latency_fn(graph, fleet, cfg)
+
+    def obj(x: jnp.ndarray, dq_fraction: jnp.ndarray) -> jnp.ndarray:
+        return lat(x) / (1.0 + beta * dq_fraction)
+
+    return obj
+
+
+@partial(jax.jit, static_argnames=("n_candidates",))
+def _noop(n_candidates: int):  # pragma: no cover - keep jax imported hot
+    return n_candidates

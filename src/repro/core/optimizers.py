@@ -1,0 +1,365 @@
+"""Placement / configuration optimizers driven by the paper's cost model.
+
+The associated placement problems are NP-hard mixed ILPs (paper §2.3.2), so —
+like every system the paper surveys — we attack them with heuristics:
+
+  * ``exhaustive_search``   — oracle on tiny discretized instances (tests).
+  * ``greedy_transfer``     — deterministic local mass-transfer descent.
+  * ``simulated_annealing`` — randomized global search.
+  * ``projected_gradient``  — beyond-paper: jax.grad through the smoothed
+    cost model (logits reparameterization ⇒ rows live on the simplex by
+    construction, availability enforced with a −inf mask).
+  * ``random_search``       — vmap-vectorized scoring of N random placements
+    (the "massive parallelism" of the *optimizer* itself).
+
+All optimizers jointly handle the paper's DQ_fraction: quality checks eat
+device capacity via :class:`DQCoupling` (caps(dq) = cap0 − dq·load), which is
+how the worked example's "DQ=1 forces fraction x_{2,0} off device 0" story
+becomes a mechanical constraint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costmodel import CostConfig, latency, objective_F
+from repro.core.devices import ExplicitFleet, RegionFleet
+from repro.core.graph import OpGraph
+from repro.core.jaxmodel import SmoothConfig, make_latency_fn
+from repro.core.placement import random_placement, uniform_placement
+
+__all__ = [
+    "DQCoupling",
+    "PlacementProblem",
+    "OptResult",
+    "exhaustive_search",
+    "greedy_transfer",
+    "simulated_annealing",
+    "projected_gradient",
+    "random_search",
+]
+
+Fleet = ExplicitFleet | RegionFleet
+
+
+@dataclasses.dataclass(frozen=True)
+class DQCoupling:
+    """Device capacity as a function of DQ_fraction.
+
+    cap_u(dq) = cap0_u − dq·load_u ; constraint: Σ_i x_{i,u} ≤ cap_u(dq).
+    With load=0 the DQ knob is free (latency unaffected — then F strictly
+    improves with dq and the optimizer pins dq=1, as eq. 8 dictates).
+    """
+
+    cap0: np.ndarray
+    load: np.ndarray
+
+    def caps(self, dq: float) -> np.ndarray:
+        return np.asarray(self.cap0) - float(dq) * np.asarray(self.load)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementProblem:
+    graph: OpGraph
+    fleet: Fleet
+    cost_cfg: CostConfig = CostConfig()
+    beta: float = 0.0
+    dq: DQCoupling | None = None
+
+    def availability(self) -> np.ndarray:
+        return self.fleet.availability(self.graph.n_ops)
+
+    def feasible(self, x: np.ndarray, dq: float, atol: float = 1e-7) -> bool:
+        if self.dq is None:
+            return True
+        return bool((x.sum(axis=0) <= self.dq.caps(dq) + atol).all())
+
+    def score(self, x: np.ndarray, dq: float = 0.0) -> float:
+        """Exact F (∞ if infeasible)."""
+        if not self.feasible(x, dq):
+            return math.inf
+        lat = latency(self.graph, self.fleet, x, self.cost_cfg)
+        return objective_F(lat, dq, self.beta)
+
+
+@dataclasses.dataclass
+class OptResult:
+    x: np.ndarray
+    dq_fraction: float
+    F: float
+    latency: float
+    history: list[float]
+    evals: int
+
+    @classmethod
+    def of(cls, prob: PlacementProblem, x: np.ndarray, dq: float,
+           history: list[float], evals: int) -> "OptResult":
+        lat = latency(prob.graph, prob.fleet, x, prob.cost_cfg)
+        return cls(x=x, dq_fraction=dq, F=objective_F(lat, dq, prob.beta),
+                   latency=lat, history=history, evals=evals)
+
+
+def _dq_grid(prob: PlacementProblem, steps: int = 5):
+    return [0.0] if prob.beta == 0.0 else list(np.linspace(0.0, 1.0, steps + 1))
+
+
+# -- exhaustive oracle --------------------------------------------------------
+
+def _compositions(total: int, parts: int):
+    """All ways to write ``total`` as an ordered sum of ``parts`` ≥0 ints."""
+    if parts == 1:
+        yield (total,)
+        return
+    for head in range(total + 1):
+        for tail in _compositions(total - head, parts - 1):
+            yield (head,) + tail
+
+
+def exhaustive_search(prob: PlacementProblem, granularity: int = 4,
+                      max_states: int = 2_000_000) -> OptResult:
+    """Enumerate placements on the grid x_{i,·} ∈ {k/granularity} — the
+    discrete oracle the heuristics are tested against.  Exponential."""
+    avail = prob.availability()
+    n_ops, n_dev = avail.shape
+    per_op_choices: list[list[np.ndarray]] = []
+    for i in range(n_ops):
+        idx = np.flatnonzero(avail[i])
+        rows = []
+        for comp in _compositions(granularity, idx.size):
+            row = np.zeros(n_dev)
+            row[idx] = np.asarray(comp) / granularity
+            rows.append(row)
+        per_op_choices.append(rows)
+    n_states = math.prod(len(c) for c in per_op_choices)
+    if n_states > max_states:
+        raise ValueError(f"search space {n_states} exceeds max_states={max_states}")
+    best_F, best_x, best_dq, evals = math.inf, None, 0.0, 0
+    dqs = _dq_grid(prob)
+    for rows in itertools.product(*per_op_choices):
+        x = np.stack(rows)
+        for dq in dqs:
+            evals += 1
+            f = prob.score(x, dq)
+            if f < best_F:
+                best_F, best_x, best_dq = f, x, dq
+    return OptResult.of(prob, best_x, best_dq, [best_F], evals)
+
+
+# -- greedy local descent -----------------------------------------------------
+
+def greedy_transfer(prob: PlacementProblem, x0: np.ndarray | None = None,
+                    deltas: tuple[float, ...] = (0.4, 0.2, 0.1, 0.05),
+                    max_rounds: int = 60) -> OptResult:
+    """Move δ mass between device pairs while it improves exact F.
+
+    Deterministic, paper-style bottleneck chasing: for every operator try all
+    (src→dst) transfers of the current δ; take the best; shrink δ when no
+    move helps.  DQ is co-optimized on a grid at each δ level.
+    """
+    avail = prob.availability()
+    n_ops, n_dev = avail.shape
+    x = uniform_placement(n_ops, avail) if x0 is None else x0.copy()
+    dq = 0.0
+    # start from a feasible point under the tightest relevant caps
+    if prob.dq is not None:
+        from repro.core.placement import project_with_caps
+        x = project_with_caps(x, prob.dq.caps(dq), avail)
+    best = prob.score(x, dq)
+    history, evals = [best], 1
+    for delta in deltas:
+        for _ in range(max_rounds):
+            improved = False
+            for dq_cand in _dq_grid(prob):
+                f = prob.score(x, dq_cand)
+                evals += 1
+                if f < best - 1e-12:
+                    best, dq, improved = f, dq_cand, True
+            for i in range(n_ops):
+                idx = np.flatnonzero(avail[i])
+                best_move, best_f = None, best
+                for u in idx:
+                    if x[i, u] < delta - 1e-12:
+                        continue
+                    for v in idx:
+                        if v == u:
+                            continue
+                        x[i, u] -= delta
+                        x[i, v] += delta
+                        f = prob.score(x, dq)
+                        evals += 1
+                        x[i, u] += delta
+                        x[i, v] -= delta
+                        if f < best_f - 1e-12:
+                            best_f, best_move = f, (u, v)
+                if best_move is not None:
+                    u, v = best_move
+                    x[i, u] -= delta
+                    x[i, v] += delta
+                    best = best_f
+                    improved = True
+            history.append(best)
+            if not improved:
+                break
+    return OptResult.of(prob, x, dq, history, evals)
+
+
+# -- simulated annealing ------------------------------------------------------
+
+def simulated_annealing(prob: PlacementProblem, rng: np.random.Generator,
+                        steps: int = 4000, t0: float = 0.5, t1: float = 1e-3,
+                        x0: np.ndarray | None = None) -> OptResult:
+    avail = prob.availability()
+    n_ops, n_dev = avail.shape
+    x = random_placement(n_ops, avail, rng) if x0 is None else x0.copy()
+    dq = 0.0
+    if prob.dq is not None:
+        from repro.core.placement import project_with_caps
+        x = project_with_caps(x, prob.dq.caps(dq), avail)
+    cur = prob.score(x, dq)
+    best, best_x, best_dq = cur, x.copy(), dq
+    history, evals = [cur], 1
+    for step in range(steps):
+        t = t0 * (t1 / t0) ** (step / max(steps - 1, 1))
+        y, ndq = x.copy(), dq
+        if prob.beta > 0.0 and rng.random() < 0.15:
+            ndq = float(np.clip(dq + rng.choice([-0.2, -0.1, 0.1, 0.2]), 0.0, 1.0))
+        else:
+            i = rng.integers(n_ops)
+            idx = np.flatnonzero(avail[i])
+            if idx.size >= 2:
+                u, v = rng.choice(idx, size=2, replace=False)
+                amt = rng.uniform(0.0, x[i, u])
+                y[i, u] -= amt
+                y[i, v] += amt
+        f = prob.score(y, ndq)
+        evals += 1
+        if math.isfinite(f) and (f < cur or rng.random() < math.exp(-(f - cur) / max(t, 1e-9))):
+            x, dq, cur = y, ndq, f
+            if cur < best:
+                best, best_x, best_dq = cur, x.copy(), dq
+        history.append(best)
+    return OptResult.of(prob, best_x, best_dq, history, evals)
+
+
+# -- projected gradient (JAX autodiff through the smoothed model) -------------
+
+def projected_gradient(prob: PlacementProblem, steps: int = 400,
+                       lr: float = 0.05, temps: tuple[float, ...] = (0.1, 0.02, 0.005),
+                       cap_penalty: float = 50.0, seed: int = 0) -> OptResult:
+    """Beyond-paper optimizer: anneal a logsumexp-smoothed F with Adam on
+    softmax logits; availability via −inf mask; caps via quadratic penalty;
+    DQ via a sigmoid-parameterized scalar.  Final score is the exact model."""
+    avail = prob.availability()
+    n_ops, n_dev = avail.shape
+    mask = jnp.where(jnp.asarray(avail), 0.0, -jnp.inf)
+    key = jax.random.PRNGKey(seed)
+    z = 0.01 * jax.random.normal(key, (n_ops, n_dev))
+    w = jnp.asarray(-1.0)  # dq = sigmoid(w); starts low
+    beta = prob.beta
+    caps_cfg = prob.dq
+    history, evals = [], 0
+
+    def x_of(z):
+        return jax.nn.softmax(z + mask, axis=1)
+
+    for temp in temps:
+        lat_fn = make_latency_fn(
+            prob.graph, prob.fleet,
+            SmoothConfig(alpha=prob.cost_cfg.alpha, temp=temp))
+
+        def loss(params):
+            z, w = params
+            x = x_of(z)
+            dq = jax.nn.sigmoid(w) if beta > 0.0 else 0.0
+            f = lat_fn(x) / (1.0 + beta * dq)
+            if caps_cfg is not None:
+                caps = jnp.asarray(caps_cfg.cap0) - dq * jnp.asarray(caps_cfg.load)
+                over = jnp.maximum(x.sum(axis=0) - caps, 0.0)
+                f = f + cap_penalty * jnp.sum(over ** 2)
+            return f
+
+        grad_fn = jax.jit(jax.value_and_grad(loss))
+        m = (jnp.zeros_like(z), jnp.zeros_like(w))
+        v = (jnp.zeros_like(z), jnp.zeros_like(w))
+        params = (z, w)
+        for t in range(1, steps + 1):
+            val, g = grad_fn(params)
+            evals += 1
+            m = jax.tree.map(lambda m_, g_: 0.9 * m_ + 0.1 * g_, m, g)
+            v = jax.tree.map(lambda v_, g_: 0.999 * v_ + 0.001 * g_ * g_, v, g)
+            mhat = jax.tree.map(lambda m_: m_ / (1 - 0.9 ** t), m)
+            vhat = jax.tree.map(lambda v_: v_ / (1 - 0.999 ** t), v)
+            params = jax.tree.map(
+                lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + 1e-8),
+                params, mhat, vhat)
+            history.append(float(val))
+        z, w = params
+    x = np.asarray(x_of(z), dtype=np.float64)
+    x = x / x.sum(axis=1, keepdims=True)
+    dq_candidates = _dq_grid(prob, steps=10)
+    dq_soft = float(jax.nn.sigmoid(w)) if beta > 0.0 else 0.0
+    # snap to the best feasible dq near the relaxed optimum
+    best_dq, best_f = 0.0, math.inf
+    for dq in sorted(set(dq_candidates + [round(dq_soft, 2)])):
+        if prob.dq is not None:
+            from repro.core.placement import project_with_caps
+            xf = project_with_caps(x, prob.dq.caps(dq), avail)
+        else:
+            xf = x
+        f = prob.score(xf, dq)
+        evals += 1
+        if f < best_f:
+            best_f, best_dq, best_x = f, dq, xf
+    return OptResult.of(prob, best_x, best_dq, history, evals)
+
+
+# -- vectorized random search -------------------------------------------------
+
+def random_search(prob: PlacementProblem, rng: np.random.Generator,
+                  n_candidates: int = 2048, sparsity: float = 0.5,
+                  batch: int = 256) -> OptResult:
+    """Score many random placements with a vmapped hard-max latency fn.
+
+    Demonstrates that the JAX cost model evaluates thousands of placements
+    per second even for large fleets — the scale knob of the paper's title.
+    """
+    avail = prob.availability()
+    n_ops, _ = avail.shape
+    lat_fn = make_latency_fn(prob.graph, prob.fleet,
+                             SmoothConfig(alpha=prob.cost_cfg.alpha, temp=0.0))
+    batched = jax.jit(jax.vmap(lat_fn))
+    best_F, best_x, best_dq, evals = math.inf, None, 0.0, 0
+    dqs = _dq_grid(prob)
+    history = []
+    # seed with the uniform placement — never return something worse
+    uni = uniform_placement(n_ops, avail)
+    for dq in dqs:
+        f = prob.score(uni, dq)
+        evals += 1
+        if f < best_F:
+            best_F, best_x, best_dq = f, uni, dq
+    done = 0
+    while done < n_candidates:
+        b = min(batch, n_candidates - done)
+        xs = np.stack([random_placement(n_ops, avail, rng, sparsity) for _ in range(b)])
+        lats = np.asarray(batched(jnp.asarray(xs)))
+        for k in range(b):
+            for dq in dqs:
+                evals += 1
+                if not prob.feasible(xs[k], dq):
+                    continue
+                f = objective_F(float(lats[k]), dq, prob.beta)
+                if f < best_F:
+                    best_F, best_x, best_dq = f, xs[k], dq
+        history.append(best_F)
+        done += b
+    if best_x is None:  # all infeasible — fall back to uniform
+        best_x = uniform_placement(n_ops, avail)
+        best_dq = 0.0
+    return OptResult.of(prob, best_x, best_dq, history, evals)

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the compute hot-spots, each with a pure-jnp
+oracle in ref.py; validated with interpret=True on CPU."""

@@ -1,0 +1,110 @@
+"""Pallas TPU flash attention (causal, GQA-ready — kv pre-repeated to H).
+
+TPU-native tiling: the (batch·head) axis and query blocks are parallel grid
+dimensions; key/value blocks are the innermost *arbitrary* (sequential) grid
+dimension so the online-softmax state (m, l, acc) lives in VMEM scratch
+across kv steps.  Block shapes default to 128×128 — MXU-aligned (multiples
+of 128 on both matmul dims) and small enough that q, k, v, acc tiles fit
+VMEM: (bq·D + 2·bk·D + bq·bk + bq·D) · 4B ≈ 0.5 MB at D=128.
+
+Causal skipping: kv blocks strictly above the diagonal are skipped entirely
+(no compute, no VMEM traffic) — this is where the kernel beats a dense
+softmax by 2× on causal shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, bq: int, bk: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _body():
+        q = q_ref[0].astype(jnp.float32)  # (bq, D)
+        k = k_ref[0].astype(jnp.float32)  # (bk, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            k_pos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = alpha * l_prev + p.sum(axis=-1)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+
+    if causal:
+        # skip kv blocks entirely above the diagonal
+        pl.when(kj * bk <= qi * bq + bq - 1)(_body)
+    else:
+        _body()
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention_pallas(q, k, v, causal: bool = True, bq: int = 128,
+                           bk: int = 128, interpret: bool = False):
+    """q, k, v: (B, S, H, D) with kv repeated to H.  Returns (B, S, H, D)."""
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    scale = D ** -0.5
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    if Sq % bq or Skv % bk:
+        raise ValueError(f"seq lens ({Sq},{Skv}) must divide blocks ({bq},{bk})")
+    # fold batch & heads, put seq in the middle: (BH, S, D)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, Skv, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, Skv, D)
+    grid = (B * H, Sq // bq, Skv // bk)
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               bq=bq, bk=bk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # m (running max)
+            pltpu.VMEM((bq,), jnp.float32),       # l (running denom)
+            pltpu.VMEM((bq, D), jnp.float32),     # acc
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,103 @@
+"""Sharding plans: parameter FSDP transform + input specs per (arch × shape).
+
+``fsdp_specs`` implements ZeRO-3-via-GSPMD: every large parameter gets its
+largest still-replicated dimension sharded over the intra-pod ``data`` axis
+on top of its tensor-parallel spec.  XLA then all-gathers weights on use and
+reduce-scatters gradients — 16× less parameter/optimizer memory per chip,
+which is what lets 33B-f32 and 480B-bf16 cells fit 16 GB v5e chips.
+The `pod` axis is deliberately NOT used for FSDP: parameter all-gathers
+would ride the slow DCI tier every step (the geo cost model prices exactly
+this; see DESIGN.md §5).
+
+``input_specs`` produces the ShapeDtypeStruct stand-ins for every model
+input of a cell — weak-type-correct, shardable, no device allocation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import Shape
+from repro.models.api import ModelConfig
+
+__all__ = ["fsdp_specs", "input_specs", "batch_specs", "cache_len"]
+
+FSDP_MIN_SIZE = 1 << 20  # leaves smaller than 1M elements stay as-is
+
+
+def fsdp_specs(spec_tree, shape_tree, mesh, axis: str = "data"):
+    """Add `axis` to the largest divisible replicated dim of big leaves
+    (shared leaf rule: repro.models.sharding.fsdp_leaf_spec — the in-body
+    constraint must pin the SAME spec)."""
+    from repro.models.sharding import fsdp_leaf_spec
+
+    def leaf(spec, sds):
+        if not isinstance(spec, P):
+            spec = P()
+        return fsdp_leaf_spec(spec, sds.shape, mesh, axis)
+
+    return jax.tree.map(leaf, spec_tree, shape_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def choose_batch_axes(global_batch: int, mesh) -> tuple[str, ...]:
+    """Largest ("pod","data") prefix whose product divides the batch —
+    long_500k has batch 1, which simply can't data-shard (its parallelism
+    is the model axis; noted as a seq-parallel hillclimb lever)."""
+    sizes = dict(mesh.shape)
+    for axes in (("pod", "data"), ("data",), ("pod",), ()):
+        if all(a in mesh.axis_names for a in axes):
+            ways = 1
+            for a in axes:
+                ways *= sizes[a]
+            if ways and global_batch % ways == 0:
+                return axes
+    return ()
+
+
+def batch_specs(mesh, global_batch: int | None = None) -> P:
+    if global_batch is None:
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    else:
+        axes = choose_batch_axes(global_batch, mesh)
+    if not axes:
+        return P()
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+def cache_len(shape: Shape) -> int:
+    """KV/cache capacity for a cell: prefill writes seq_len; decode holds a
+    cache of seq_len and appends one token (capacity +1, rounded to 128)."""
+    if shape.kind == "decode":
+        return shape.seq_len + 128
+    return shape.seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: Shape, mesh):
+    """dict of ShapeDtypeStruct for the cell's step function inputs
+    (the batch part only — params/opt/cache SDS come from eval_shape)."""
+    B = shape.global_batch
+    bspec = batch_specs(mesh, B)
+
+    def sds(shp, dtype, spec):
+        return jax.ShapeDtypeStruct(
+            shp, dtype, sharding=jax.sharding.NamedSharding(mesh, spec))
+
+    out = {}
+    if shape.kind == "train":
+        out["tokens"] = sds((B, shape.seq_len), jnp.int32, bspec)
+        out["labels"] = sds((B, shape.seq_len), jnp.int32, bspec)
+    elif shape.kind == "prefill":
+        out["tokens"] = sds((B, shape.seq_len), jnp.int32, bspec)
+    else:  # decode
+        out["tokens"] = sds((B, 1), jnp.int32, bspec)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        out["image_embeds"] = sds((B, cfg.n_image_tokens, cfg.d_model),
+                                  jnp.float32, P(*bspec, None, None))
+    if cfg.family == "audio" and shape.kind != "decode":
+        out["audio_frames"] = sds((B, cfg.n_audio_frames, cfg.d_model),
+                                  jnp.float32, P(*bspec, None, None))
+    return out

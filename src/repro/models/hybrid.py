@@ -1,0 +1,210 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block
+(single parameter set) applied every ``shared_attn_every`` SSM layers
+(arXiv:2411.15242).
+
+Execution: python loop over attention sites (≤7 — HLO stays small), each
+followed by a ``lax.scan`` over its group of mamba blocks.  The shared block
+has one param set but per-site KV caches (its K/V differ per application).
+Sub-quadratic end to end — runs the long_500k cells (attention sites see the
+full context only through decode-time cache reads, O(S) per token).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.api import ModelConfig
+from repro.models.layers import (
+    KVCache, apply_norm, attention, init_attention, init_mlp, make_norm, mlp,
+)
+from repro.models.mamba2 import (
+    SSMCache, init_mamba_block, mamba_block, mamba_block_specs,
+)
+from repro.models.sharding import param_spec, shard
+from repro.models.transformer import remat_wrap, stack_layer_specs
+
+__all__ = ["Zamba2LM", "HybridCache"]
+
+
+@dataclasses.dataclass
+class HybridCache:
+    ssm: SSMCache  # stacked (L, …)
+    attn: KVCache  # stacked (n_sites, …)
+
+
+jax.tree_util.register_dataclass(HybridCache, data_fields=["ssm", "attn"],
+                                 meta_fields=[])
+
+
+class Zamba2LM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.shared_attn_every > 0
+        self.cfg = cfg
+
+    @property
+    def n_sites(self) -> int:
+        cfg = self.cfg
+        return -(-cfg.n_layers // cfg.shared_attn_every)
+
+    def _group(self, s: int) -> tuple[int, int]:
+        cfg = self.cfg
+        lo = s * cfg.shared_attn_every
+        return lo, min(lo + cfg.shared_attn_every, cfg.n_layers)
+
+    # ------------------------------------------------------------ params --
+    def init_params(self, key):
+        cfg = self.cfg
+        ke, kb, ka, km, kh = jax.random.split(key, 5)
+        blocks = jax.vmap(lambda k: init_mamba_block(k, cfg))(
+            jax.random.split(kb, cfg.n_layers))
+        shared = {
+            "ln1": make_norm(cfg.norm_type, cfg.d_model, cfg.pdtype),
+            "attn": init_attention(ka, cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.hd, cfg.pdtype),
+            "ln2": make_norm(cfg.norm_type, cfg.d_model, cfg.pdtype),
+            "mlp": init_mlp(km, cfg.d_model, cfg.d_ff, cfg.pdtype,
+                            cfg.mlp_kind),
+        }
+        return {
+            "embed": (jax.random.normal(ke, (cfg.vocab_padded, cfg.d_model))
+                      * cfg.d_model ** -0.5).astype(cfg.pdtype),
+            "blocks": blocks,
+            "shared_attn": shared,
+            "final_norm": make_norm(cfg.norm_type, cfg.d_model, cfg.pdtype),
+            "head": (jax.random.normal(kh, (cfg.d_model, cfg.vocab_padded))
+                     * cfg.d_model ** -0.5).astype(cfg.pdtype),
+        }
+
+    def param_specs(self):
+        cfg = self.cfg
+        from repro.models.layers import attn_specs
+        shared = {
+            "ln1": param_spec((None,)),
+            "attn": attn_specs(),
+            "ln2": param_spec((None,)),
+            "mlp": {
+                "wi_gate": param_spec((None, "ff")),
+                "wi_up": param_spec((None, "ff")),
+                "wo": param_spec(("ff", None)),
+            },
+        }
+        return {
+            "embed": param_spec(("vocab", None)),
+            "blocks": stack_layer_specs(mamba_block_specs(cfg)),
+            "shared_attn": shared,
+            "final_norm": param_spec((None,)),
+            "head": param_spec((None, "vocab")),
+        }
+
+    # ------------------------------------------------------------ pieces --
+    def _shared_block(self, params, x, cache=None, cache_pos=None):
+        cfg = self.cfg
+        sp = params["shared_attn"]
+        h = apply_norm(cfg.norm_type, x, sp["ln1"])
+        a, new_cache = attention(
+            sp["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.hd, rope_theta=cfg.rope_theta, causal=True,
+            cache=cache, cache_pos=cache_pos, impl=cfg.attention_impl,
+            chunk=cfg.attn_chunk)
+        x = x + a
+        h = apply_norm(cfg.norm_type, x, sp["ln2"])
+        x = x + mlp(sp["mlp"], h, cfg.mlp_kind)
+        return shard(x, "batch", "seq", None), new_cache
+
+    def _slice_blocks(self, blocks, lo, hi):
+        return jax.tree.map(lambda a: a[lo:hi], blocks)
+
+    def _run(self, params, x, caches=None, cache_pos=None, decode=False):
+        """Shared driver for forward / prefill / decode."""
+        cfg = self.cfg
+        new_ssm, new_attn = [], []
+        for s in range(self.n_sites):
+            attn_cache = None
+            if caches is not None:
+                attn_cache = jax.tree.map(lambda a: a[s], caches.attn)
+            if caches is None and cfg.remat != "none":
+                # remat each attention site: without this the backward
+                # keeps every site's attention internals live — ~15 GB for
+                # zamba2 train_4k (§Perf notes)
+                x, nc = jax.checkpoint(
+                    lambda xx: self._shared_block(params, xx))(x)
+            else:
+                x, nc = self._shared_block(params, x, attn_cache, cache_pos)
+            new_attn.append(nc)
+            lo, hi = self._group(s)
+            group = self._slice_blocks(params["blocks"], lo, hi)
+
+            if caches is None:
+                def body(carry, bp):
+                    y, _ = mamba_block(bp, carry, cfg)
+                    return y, None
+                body = remat_wrap(body, cfg.remat)
+                x, _ = jax.lax.scan(body, x, group)
+            else:
+                grp_cache = jax.tree.map(lambda a: a[lo:hi], caches.ssm)
+
+                def body(carry, xs):
+                    bp, cl = xs
+                    y, nc = mamba_block(bp, carry, cfg, cl, decode=decode)
+                    return y, nc
+                if not decode:
+                    body = remat_wrap(body, cfg.remat)
+                x, grp_new = jax.lax.scan(body, x, (group, grp_cache))
+                new_ssm.append(grp_new)
+        if caches is None:
+            return x, None
+        ssm = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *new_ssm)
+        attn = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *new_attn)
+        return x, HybridCache(ssm, attn)
+
+    # -------------------------------------------------------------- API ---
+    def embed_tokens(self, params, tokens):
+        from repro.models.layers import embed_lookup
+        x = embed_lookup(params["embed"], tokens, self.cfg.adtype)
+        return shard(x, "batch", "seq", None)
+
+    def logits(self, params, x):
+        x = apply_norm(self.cfg.norm_type, x, params["final_norm"])
+        out = jnp.einsum("bsd,dv->bsv", x, params["head"],
+                         preferred_element_type=jnp.float32)
+        return shard(out, "batch", None, "vocab")  # vocab-parallel logits (CE reduces over V)
+
+    def forward(self, params, batch):
+        x = self.embed_tokens(params, batch["tokens"])
+        x, _ = self._run(params, x)
+        from repro.models.layers import cotangent_cast
+        x = cotangent_cast(x)  # keep the backward at activation dtype
+        return self.logits(params, x), jnp.float32(0.0)
+
+    def init_cache(self, batch_size: int, max_seq: int):
+        cfg = self.cfg
+        L = cfg.n_layers
+        ssm = SSMCache(
+            jnp.zeros((L, batch_size, cfg.ssm_heads, cfg.ssm_state,
+                       cfg.ssm_head_dim), jnp.float32),
+            jnp.zeros((L, batch_size, cfg.ssm_conv - 1,
+                       cfg.d_inner + 2 * cfg.ssm_state), cfg.adtype))
+        z = jnp.zeros((self.n_sites, batch_size, max_seq,
+                       cfg.n_kv_heads * cfg.hd), cfg.adtype)
+        return HybridCache(ssm, KVCache(z, z))
+
+    def cache_specs(self):
+        return HybridCache(
+            SSMCache(param_spec((None, "batch", "heads", None, None)),
+                     param_spec((None, "batch", None, "inner"))),
+            KVCache(param_spec((None, "batch", None, "kv_heads")),
+                    param_spec((None, "batch", None, "kv_heads"))))
+
+    def prefill(self, params, batch, cache):
+        x = self.embed_tokens(params, batch["tokens"])
+        x, new_cache = self._run(params, x, cache, jnp.int32(0))
+        return self.logits(params, x[:, -1:, :]), new_cache
+
+    def decode_step(self, params, cache, pos, tokens):
+        x = self.embed_tokens(params, tokens)
+        x, new_cache = self._run(params, x, cache, pos, decode=True)
+        return self.logits(params, x), new_cache

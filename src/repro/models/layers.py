@@ -1,0 +1,412 @@
+"""Shared neural layers for the model zoo (pure JAX, functional style).
+
+Every layer is a pair ``init_*(key, ...) -> params`` / ``apply(params, x)``;
+params are plain pytrees (dicts of jnp arrays) so the whole model is a single
+pytree that pjit shards by spec (see each family's ``param_specs``).
+
+Attention weights keep an explicit head axis — (d, H, hd) — so tensor
+parallelism shards *heads* over the `model` mesh axis; GSPMD pads when the
+head count doesn't divide (56 q heads on a 16-way axis → padded to 64).
+KV heads shard the same way and are repeated to H inside the computation
+(GQA), which is also how the Pallas flash kernel consumes them.
+
+Attention has three execution paths:
+  * ``reference`` — chunked flash-style attention (scan over query chunks,
+    f32 softmax rows): O(chunk·S) memory so 32k prefill fits HBM, and the
+    path every backend can compile (the dry-run uses it).
+  * ``pallas`` / ``pallas_interpret`` — kernels/flash_attention.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import shard
+
+__all__ = [
+    "rms_norm", "layer_norm", "make_norm", "apply_norm",
+    "init_dense", "dense",
+    "rotary_embedding", "apply_rotary",
+    "init_attention", "attention",
+    "init_mlp", "mlp",
+    "cross_entropy_loss", "KVCache",
+]
+
+
+# ---------------------------------------------------------------- norms ----
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray | None, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    if weight is not None:
+        x = x * weight.astype(jnp.float32)
+    return x.astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, weight=None, bias=None, eps: float = 1e-5):
+    """Non-parametric when weight/bias are None (OLMo-style)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        x = x * weight.astype(jnp.float32)
+    if bias is not None:
+        x = x + bias.astype(jnp.float32)
+    return x.astype(dt)
+
+
+def make_norm(norm_type: str, d: int, dtype):
+    if norm_type == "rmsnorm":
+        return jnp.ones((d,), dtype=dtype)
+    if norm_type == "layernorm_nonparam":
+        return jnp.zeros((0,), dtype=dtype)  # placeholder leaf (no params)
+    raise ValueError(norm_type)
+
+
+def apply_norm(norm_type: str, x, w, eps: float = 1e-6):
+    if norm_type == "rmsnorm":
+        return rms_norm(x, w, eps)
+    return layer_norm(x, eps=1e-5)
+
+
+# ---------------------------------------------------------------- dense ----
+
+def init_dense(key, d_in: int, d_out: int, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def dense(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    # mixed-precision weight streaming: matmuls read weights at activation
+    # width (bf16) — halves HBM weight traffic vs streaming f32 masters
+    # (§Perf iteration 1); master weights stay f32 in the optimizer.
+    # preferred_element_type = activation dtype: otherwise jnp.einsum's
+    # default f32 accumulation makes GSPMD all-reduce the tensor-parallel
+    # partial sums at f32 width — 2× wire bytes (§Perf iteration 4).  The
+    # per-chip MXU still accumulates in f32 internally.
+    return jnp.einsum("...i,io->...o", x, w.astype(x.dtype),
+                      preferred_element_type=x.dtype)
+
+
+def embed_lookup(table: jnp.ndarray, tokens: jnp.ndarray,
+                 out_dtype, chunk: int = 512) -> jnp.ndarray:
+    """Embedding as a chunked one-hot matmul (TPU-native).
+
+    ``jnp.take``'s backward is a scatter-add, which XLA expands into a
+    sequential per-token loop over the table shard — the dry-run analyzer
+    measured 248 TB/device of traffic for qwen3's 152k tokens (§Perf
+    iteration 1).  A one-hot einsum keeps both directions as MXU matmuls
+    (bwd = one_hotᵀ @ dy); chunking the sequence bounds the one-hot to
+    (B, chunk, V_shard)."""
+    B, S = tokens.shape
+    V, D = table.shape
+    w = table.astype(out_dtype)
+
+    def one(chunk_tokens):
+        oh = jax.nn.one_hot(chunk_tokens, V, dtype=out_dtype)
+        return jnp.einsum("bcv,vd->bcd", oh, w)
+
+    if S <= chunk:
+        return one(tokens)
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    tp = jnp.pad(tokens, ((0, 0), (0, pad)))
+    ts = tp.reshape(B, n, chunk).transpose(1, 0, 2)
+    _, outs = jax.lax.scan(lambda c, t: (None, one(t)), None, ts)
+    return outs.transpose(1, 0, 2, 3).reshape(B, n * chunk, D)[:, :S]
+
+
+# --------------------------------------------------------------- rotary ----
+
+def rotary_embedding(positions: jnp.ndarray, head_dim: int, theta: float):
+    """(P,) int positions → cos/sin (P, head_dim/2), f32."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rotary(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x: (B, S, H, D); cos/sin: (S, D/2)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1).astype(dt)
+
+
+# ------------------------------------------------------------ attention ----
+
+@dataclasses.dataclass
+class KVCache:
+    """k/v: (B, S_max, K·D) per site (callers stack a layer axis in front).
+
+    The head axis is stored FLAT so the cache shards on K·D over the model
+    axis even when K alone doesn't divide it (same trick as the weights)."""
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+
+jax.tree_util.register_dataclass(KVCache, data_fields=["k", "v"], meta_fields=[])
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, dtype=jnp.float32, qk_norm: bool = False):
+    """Weights are stored FLAT — (d, H·hd) — so the tensor-parallel shard
+    axis is the flattened head dim, which divides the 16-way model axis for
+    every assigned arch even when the head count (56, 20…) does not.  The
+    head axis is recovered by reshape inside the computation; GSPMD re-pads
+    internally as needed."""
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(ks[0], d_model, n_heads * head_dim, dtype),
+        "wk": init_dense(ks[1], d_model, n_kv_heads * head_dim, dtype),
+        "wv": init_dense(ks[2], d_model, n_kv_heads * head_dim, dtype),
+        "wo": init_dense(ks[3], n_heads * head_dim, d_model, dtype,
+                         scale=(n_heads * head_dim) ** -0.5),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.ones((head_dim,), dtype=dtype)
+        p["k_norm"] = jnp.ones((head_dim,), dtype=dtype)
+    return p
+
+
+def attn_specs(qk_norm: bool = False):
+    """PartitionSpecs for one attention site (flat-weight layout)."""
+    from repro.models.sharding import param_spec
+    s = {
+        "wq": param_spec((None, "heads")),
+        "wk": param_spec((None, "kv_heads")),
+        "wv": param_spec((None, "kv_heads")),
+        "wo": param_spec(("heads", None)),
+    }
+    if qk_norm:
+        s["q_norm"] = param_spec((None,))
+        s["k_norm"] = param_spec((None,))
+    return s
+
+
+def _sdpa_chunked(q, k, v, *, causal: bool, q_offset, chunk: int):
+    """Flash-style reference: scan over query chunks, f32 softmax rows.
+
+    q: (B, Sq, H, D); k, v: (B, Skv, H, D) (kv already repeated to H).
+    Peak memory O(B·chunk·H·Skv), independent of Sq.
+    """
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    scale = D ** -0.5
+    kv_pos = jnp.arange(Skv)
+
+    def one_chunk(q_chunk, start):
+        s = jnp.einsum("bchd,bshd->bchs", q_chunk, k,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = q_offset + start + jnp.arange(q_chunk.shape[1])
+            mask = kv_pos[None, :] <= q_pos[:, None]  # (c, Skv)
+            s = jnp.where(mask[None, :, None, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bchs,bshd->bchd", p.astype(v.dtype), v)
+
+    if Sq <= chunk:
+        return one_chunk(q, 0)
+    n = -(-Sq // chunk)
+    pad = n * chunk - Sq
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qs = qp.reshape(B, n, chunk, H, D).transpose(1, 0, 2, 3, 4)
+    starts = jnp.arange(n) * chunk
+
+    def body(_, xs):
+        qc, st = xs
+        return None, one_chunk(qc, st)
+
+    # remat each q-chunk: otherwise ALL chunks' (c, Skv) score rows are
+    # stacked as backward residuals — ~17 GB live at once for zamba2's
+    # shared-attention sites (the Pallas kernel never materializes them)
+    body = jax.checkpoint(body)
+    _, outs = jax.lax.scan(body, None, (qs, starts))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, n * chunk, H, D)
+    return out[:, :Sq]
+
+
+def attention(
+    params: dict,
+    x: jnp.ndarray,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: float | None = 1e4,
+    causal: bool = True,
+    cache: KVCache | None = None,
+    cache_pos: jnp.ndarray | None = None,
+    kv_source: jnp.ndarray | None = None,
+    impl: str = "reference",
+    chunk: int = 256,
+    qk_norm: bool = False,
+):
+    """Self- or cross-attention with optional KV cache.
+
+    Modes:
+      * train:         cache=None — full-seq causal self-attention.
+      * prefill:       cache=zeros buffer, cache_pos=0 — writes K/V.
+      * decode:        x is (B,1,d); cache_pos = current length.
+      * cross-attn:    kv_source (B,S_src,d) provides K/V, causal=False;
+        decode-time, cache w/ cache_pos=None reads precomputed K/V.
+    Returns (out, new_cache).
+    """
+    B, Sq, _ = x.shape
+    G = n_heads // n_kv_heads
+    q = dense(params["wq"], x).reshape(B, Sq, n_heads, head_dim)
+    if qk_norm:
+        q = rms_norm(q, params["q_norm"])
+
+    if cache is not None and cache_pos is None:
+        # cross-attn decode: K/V precomputed at prefill, no rope
+        S_c = cache.k.shape[1]
+        k = cache.k.reshape(B, S_c, n_kv_heads, head_dim)
+        v = cache.v.reshape(B, S_c, n_kv_heads, head_dim)
+        new_cache = cache
+        q_offset = 0
+    else:
+        src = x if kv_source is None else kv_source
+        Skv_new = src.shape[1]
+        k = dense(params["wk"], src).reshape(B, Skv_new, n_kv_heads, head_dim)
+        v = dense(params["wv"], src).reshape(B, Skv_new, n_kv_heads, head_dim)
+        if qk_norm:
+            k = rms_norm(k, params["k_norm"])
+        q_offset = 0
+        if rope_theta is not None and kv_source is None:
+            base = cache_pos if (cache is not None and cache_pos is not None) else 0
+            cos_q, sin_q = rotary_embedding(base + jnp.arange(Sq), head_dim, rope_theta)
+            cos_k, sin_k = rotary_embedding(base + jnp.arange(Skv_new), head_dim, rope_theta)
+            q = apply_rotary(q, cos_q, sin_q)
+            k = apply_rotary(k, cos_k, sin_k)
+        if cache is not None and cache_pos is not None:
+            # write new K/V (flat layout); unwritten future slots are
+            # masked by q_offset
+            kf = jax.lax.dynamic_update_slice_in_dim(
+                cache.k, k.reshape(B, Skv_new, -1).astype(cache.k.dtype),
+                cache_pos, axis=1)
+            vf = jax.lax.dynamic_update_slice_in_dim(
+                cache.v, v.reshape(B, Skv_new, -1).astype(cache.v.dtype),
+                cache_pos, axis=1)
+            new_cache = KVCache(kf, vf)
+            S_c = kf.shape[1]
+            k = kf.reshape(B, S_c, n_kv_heads, head_dim)
+            v = vf.reshape(B, S_c, n_kv_heads, head_dim)
+            q_offset = cache_pos
+        else:
+            new_cache = None
+
+    # pin head-parallelism: under sequence-sharded activations GSPMD may
+    # otherwise replicate heads and shard seq inside attention — 16×
+    # redundant attention compute/memory (§Perf iteration 1, finding 3)
+    from repro.models.sharding import shard_div
+    q = shard_div(q, ("batch", None, "heads", None))
+    k = shard_div(k, ("batch", None, "kv_heads", None))
+    v = shard_div(v, ("batch", None, "kv_heads", None))
+
+    if G > 1 and Sq == 1:
+        # decode: grouped-GQA einsum — never materialize the G×-repeated
+        # KV cache (7.5 GB/step for deepseek-33B; §Perf iteration 7).  The
+        # (K, G) head split on a single-token q is a trivial reshard.
+        q5 = q.reshape(B, Sq, n_kv_heads, G, head_dim)
+        s = jnp.einsum("bqkgd,bskd->bqkgs", q5, k,
+                       preferred_element_type=jnp.float32) * head_dim ** -0.5
+        if causal:
+            kv_pos = jnp.arange(k.shape[1])
+            mask = kv_pos[None, :] <= q_offset + jnp.arange(Sq)[:, None]
+            s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bqkgs,bskd->bqkgd", p.astype(v.dtype), v)
+        out = out.reshape(B, Sq, n_heads, head_dim)
+    else:
+        # GQA: repeat kv heads to H (the flash kernel indexes instead on TPU)
+        if G > 1:
+            k = jnp.repeat(k, G, axis=2)
+            v = jnp.repeat(v, G, axis=2)
+        if impl in ("pallas", "pallas_interpret") and cache is None \
+                and kv_source is None and causal:
+            from repro.kernels import ops as kops
+            out = kops.flash_attention(q, k, v, causal=True,
+                                       interpret=(impl == "pallas_interpret"))
+        else:
+            out = _sdpa_chunked(q, k, v, causal=causal, q_offset=q_offset,
+                                chunk=chunk)
+    proj = dense(params["wo"], out.reshape(B, Sq, n_heads * head_dim))
+    return proj, new_cache
+
+
+# ---------------------------------------------------------------- MLPs -----
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32,
+             kind: str = "swiglu"):
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "wi_gate": init_dense(ks[0], d_model, d_ff, dtype),
+            "wi_up": init_dense(ks[1], d_model, d_ff, dtype),
+            "wo": init_dense(ks[2], d_ff, d_model, dtype, scale=d_ff ** -0.5),
+        }
+    return {  # gelu
+        "wi": init_dense(ks[0], d_model, d_ff, dtype),
+        "wo": init_dense(ks[1], d_ff, d_model, dtype, scale=d_ff ** -0.5),
+    }
+
+
+def mlp(params, x, kind: str = "swiglu"):
+    if kind == "swiglu":
+        h = jax.nn.silu(dense(params["wi_gate"], x)) * dense(params["wi_up"], x)
+    else:
+        h = jax.nn.gelu(dense(params["wi"], x))
+    h = shard(h, "batch", None, "ff")  # inside MLP the shard axis is ff (SP re-shards at block end)
+    return dense(params["wo"], h)
+
+
+def cotangent_cast(x: jnp.ndarray) -> jnp.ndarray:
+    """Identity fwd; casts the COTANGENT to x's dtype in bwd.
+
+    Guard rail between the f32 cross-entropy head and the layer stack: if
+    any head-path op promoted the backward to f32, residual adds would
+    propagate it unchanged through every layer (2× backward wire/HBM).
+    Measured on qwen3 train it is currently a no-op — the convert-transpose
+    chain already downcasts (§Perf iteration 4a, refuted-as-win) — but it
+    pins the invariant against future head changes."""
+
+    @jax.custom_vjp
+    def ident(v):
+        return v
+
+    def fwd(v):
+        return v, None
+
+    def bwd(_, g):
+        return (g.astype(x.dtype),)
+
+    ident.defvjp(fwd, bwd)
+    return ident(x)
+
+
+# ---------------------------------------------------------------- loss -----
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Vocab-parallel-friendly CE: every reduction over V is a sum/max, so
+    GSPMD keeps logits sharded on V and only all-reduces (B,S) scalars —
+    no logits all-gather (the iota-compare form avoids a gather op)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    hit = labels[..., None] == jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, logits.ndim - 1)
+    ll = jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
+    loss = lse - ll
+    if mask is not None:
+        loss = loss * mask
+        return loss.sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss.mean()

@@ -1,0 +1,298 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+The SSD layer is computed chunk-wise: within a chunk of Q tokens the
+quadratic "attention-like" form runs on the MXU; across chunks a sequential
+``lax.scan`` passes the (H, N, P) state.  This is the TPU-native adaptation
+of the paper's algorithm: per-chunk tensors are (B, Q, Q, H) — bounded
+regardless of sequence length, so 500k-token contexts stream through with
+constant memory (the long_500k cells).
+
+Decode is the O(1) recurrence: S ← exp(A·dt)·S + dt·B⊗x, y = C·S + D·x,
+plus a (k−1)-deep causal-conv ring buffer.  No KV cache — state size is
+independent of context length.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.api import ModelConfig
+from repro.models.layers import cross_entropy_loss, make_norm, apply_norm, rms_norm
+from repro.models.sharding import param_spec, shard
+from repro.models.transformer import remat_wrap, stack_layer_specs
+
+__all__ = ["Mamba2LM", "SSMCache", "init_mamba_block", "mamba_block",
+           "mamba_block_specs", "ssd_chunked", "ssd_decode_step"]
+
+
+@dataclasses.dataclass
+class SSMCache:
+    """state: (B, H, N, P); conv: (B, k−1, Dc) ring of recent conv inputs."""
+
+    state: jnp.ndarray
+    conv: jnp.ndarray
+
+
+jax.tree_util.register_dataclass(SSMCache, data_fields=["state", "conv"],
+                                 meta_fields=[])
+
+
+# ----------------------------------------------------------------- SSD -----
+
+def ssd_chunked(x, B, C, dt, A, D, chunk: int):
+    """Chunked SSD scan.
+
+    x: (b, L, H, P); B, C: (b, L, N); dt: (b, L, H); A, D: (H,).
+    Returns (y (b, L, H, P), final_state (b, H, N, P)).
+    """
+    b, L, H, Pd = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, L)
+    n = -(-L // Q)
+    pad = n * Q - L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+
+    def reshape_chunks(t):
+        return t.reshape((b, n, Q) + t.shape[2:]).swapaxes(0, 1)
+
+    xc, Bc, Cc, dtc = map(reshape_chunks, (x, B, C, dt))
+    S0 = jnp.zeros((b, H, N, Pd), dtype=jnp.float32)
+
+    def body(S, xs):
+        x_c, B_c, C_c, dt_c = xs  # (b,Q,H,P), (b,Q,N), (b,Q,N), (b,Q,H)
+        dtA = dt_c * A[None, None, :]  # (b,Q,H), negative
+        cum = jnp.cumsum(dtA, axis=1)  # (b,Q,H)
+        total = cum[:, -1, :]  # (b,H)
+        # intra-chunk quadratic form
+        CB = jnp.einsum("biN,bjN->bij", C_c, B_c,
+                        preferred_element_type=jnp.float32)  # (b,Q,Q)
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (b,i,j,H)
+        mask = jnp.tril(jnp.ones((Q, Q), dtype=bool))
+        M = CB[..., None] * jnp.where(mask[None, :, :, None], decay, 0.0) \
+            * dt_c[:, None, :, :]  # (b,i,j,H)
+        y = jnp.einsum("bijh,bjhp->bihp", M, x_c.astype(jnp.float32))
+        # contribution of carried-in state
+        y += jnp.einsum("biN,bhNp->bihp", C_c.astype(jnp.float32), S) \
+            * jnp.exp(cum)[..., None]
+        # state update
+        w = jnp.exp(total[:, None, :] - cum) * dt_c  # (b,Q,H)
+        S_new = jnp.exp(total)[..., None, None] * S + jnp.einsum(
+            "bjN,bjh,bjhp->bhNp", B_c.astype(jnp.float32), w,
+            x_c.astype(jnp.float32))
+        y += D[None, None, :, None] * x_c.astype(jnp.float32)
+        return S_new, y.astype(x_c.dtype)
+
+    S, ys = jax.lax.scan(body, S0, (xc, Bc, Cc, dtc))
+    y = ys.swapaxes(0, 1).reshape(b, n * Q, H, Pd)[:, :L]
+    return y, S
+
+
+def ssd_decode_step(x, B, C, dt, A, D, state):
+    """One-token recurrence.  x: (b,1,H,P); B,C: (b,1,N); dt: (b,1,H)."""
+    dtA = jnp.exp(dt[:, 0] * A[None, :])  # (b,H)
+    S = dtA[..., None, None] * state + jnp.einsum(
+        "bN,bh,bhp->bhNp", B[:, 0].astype(jnp.float32), dt[:, 0],
+        x[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bN,bhNp->bhp", C[:, 0].astype(jnp.float32), S) \
+        + D[None, :, None] * x[:, 0].astype(jnp.float32)
+    return y[:, None].astype(x.dtype), S
+
+
+# --------------------------------------------------------------- block -----
+
+def init_mamba_block(key, cfg: ModelConfig):
+    d, di, N, H, k = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_conv)
+    ks = jax.random.split(key, 8)
+    dt = cfg.pdtype
+    s = d ** -0.5
+    Dc = di + 2 * N
+    return {
+        "norm": make_norm(cfg.norm_type, d, dt),
+        "wz": (jax.random.normal(ks[0], (d, di)) * s).astype(dt),
+        "wx": (jax.random.normal(ks[1], (d, di)) * s).astype(dt),
+        "wB": (jax.random.normal(ks[2], (d, N)) * s).astype(dt),
+        "wC": (jax.random.normal(ks[3], (d, N)) * s).astype(dt),
+        "wdt": (jax.random.normal(ks[4], (d, H)) * s).astype(dt),
+        "conv_w": (jax.random.normal(ks[5], (k, Dc)) * k ** -0.5).astype(dt),
+        "conv_b": jnp.zeros((Dc,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "gate_norm": jnp.ones((di,), dt),
+        "out_proj": (jax.random.normal(ks[6], (di, d)) * di ** -0.5).astype(dt),
+    }
+
+
+def mamba_block_specs(cfg: ModelConfig):
+    return {
+        "norm": param_spec((None,)),
+        "wz": param_spec((None, "inner")),
+        "wx": param_spec((None, "inner")),
+        "wB": param_spec((None, None)),
+        "wC": param_spec((None, None)),
+        "wdt": param_spec((None, "heads")),
+        "conv_w": param_spec((None, "inner")),
+        "conv_b": param_spec(("inner",)),
+        "A_log": param_spec(("heads",)),
+        "D": param_spec(("heads",)),
+        "dt_bias": param_spec(("heads",)),
+        "gate_norm": param_spec(("inner",)),
+        "out_proj": param_spec(("inner", None)),
+    }
+
+
+def _causal_conv(u, w, b, conv_cache=None):
+    """Depthwise causal conv, kernel k.  u: (B, L, Dc); w: (k, Dc).
+
+    With conv_cache (B, k−1, Dc) the history prepends u (decode/prefill
+    continuation).  Returns (y (B, L, Dc), new_cache)."""
+    k = w.shape[0]
+    if conv_cache is None:
+        hist = jnp.zeros((u.shape[0], k - 1, u.shape[2]), dtype=u.dtype)
+    else:
+        hist = conv_cache.astype(u.dtype)
+    full = jnp.concatenate([hist, u], axis=1)  # (B, L+k−1, Dc)
+    L = u.shape[1]
+    y = sum(full[:, i:i + L] * w[i][None, None, :] for i in range(k))
+    y = y + b[None, None, :]
+    new_cache = full[:, -(k - 1):] if k > 1 else hist
+    return y, new_cache
+
+
+def mamba_block(bp, x, cfg: ModelConfig, cache: SSMCache | None = None,
+                decode: bool = False):
+    """Pre-norm residual Mamba2 block.  Returns (x, new_cache)."""
+    b, L, d = x.shape
+    di, N, H, Pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = apply_norm(cfg.norm_type, x, bp["norm"])
+    dtp = x.dtype
+    z = jnp.einsum("bld,di->bli", h, bp["wz"].astype(dtp),
+                   preferred_element_type=dtp)
+    xin = jnp.einsum("bld,di->bli", h, bp["wx"].astype(dtp),
+                     preferred_element_type=dtp)
+    Bin = jnp.einsum("bld,dn->bln", h, bp["wB"].astype(dtp),
+                     preferred_element_type=dtp)
+    Cin = jnp.einsum("bld,dn->bln", h, bp["wC"].astype(dtp),
+                     preferred_element_type=dtp)
+    dt_raw = jnp.einsum("bld,dh->blh", h, bp["wdt"]).astype(jnp.float32)
+
+    conv_in = jnp.concatenate([xin, Bin, Cin], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, bp["conv_w"], bp["conv_b"],
+                                      cache.conv if cache is not None else None)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xs, Bs, Cs = jnp.split(conv_out, [di, di + N], axis=-1)
+    xs = xs.reshape(b, L, H, Pd)
+    xs = shard(xs, "batch", None, "heads", None)
+    dt = jax.nn.softplus(dt_raw + bp["dt_bias"][None, None, :])
+    A = -jnp.exp(bp["A_log"])
+
+    if decode:
+        y, S = ssd_decode_step(xs, Bs, Cs, dt, A, bp["D"], cache.state)
+    else:
+        y, S = ssd_chunked(xs, Bs, Cs, dt, A, bp["D"], cfg.ssm_chunk)
+    y = y.reshape(b, L, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 bp["gate_norm"])
+    out = jnp.einsum("bli,id->bld", y, bp["out_proj"].astype(dtp),
+                     preferred_element_type=dtp)
+    new_cache = SSMCache(S, new_conv) if (cache is not None or decode) else None
+    return x + out, new_cache
+
+
+# ---------------------------------------------------------------- model ----
+
+class Mamba2LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init_params(self, key):
+        cfg = self.cfg
+        ke, kb, kh = jax.random.split(key, 3)
+        blocks = jax.vmap(lambda k: init_mamba_block(k, cfg))(
+            jax.random.split(kb, cfg.n_layers))
+        return {
+            "embed": (jax.random.normal(ke, (cfg.vocab_padded, cfg.d_model))
+                      * cfg.d_model ** -0.5).astype(cfg.pdtype),
+            "blocks": blocks,
+            "final_norm": make_norm(cfg.norm_type, cfg.d_model, cfg.pdtype),
+            "head": (jax.random.normal(kh, (cfg.d_model, cfg.vocab_padded))
+                     * cfg.d_model ** -0.5).astype(cfg.pdtype),
+        }
+
+    def param_specs(self):
+        return {
+            "embed": param_spec(("vocab", None)),
+            "blocks": stack_layer_specs(mamba_block_specs(self.cfg)),
+            "final_norm": param_spec((None,)),
+            "head": param_spec((None, "vocab")),
+        }
+
+    def embed_tokens(self, params, tokens):
+        from repro.models.layers import embed_lookup
+        x = embed_lookup(params["embed"], tokens, self.cfg.adtype)
+        return shard(x, "batch", "seq", None)
+
+    def logits(self, params, x):
+        x = apply_norm(self.cfg.norm_type, x, params["final_norm"])
+        out = jnp.einsum("bsd,dv->bsv", x, params["head"],
+                         preferred_element_type=jnp.float32)
+        return shard(out, "batch", None, "vocab")  # vocab-parallel logits (CE reduces over V)
+
+    def forward(self, params, batch):
+        x = self.embed_tokens(params, batch["tokens"])
+
+        def body(carry, bp):
+            y, _ = mamba_block(bp, carry, self.cfg)
+            return y, jnp.float32(0.0)
+
+        body = remat_wrap(body, self.cfg.remat)
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        from repro.models.layers import cotangent_cast
+        x = cotangent_cast(x)  # keep the backward at activation dtype
+        return self.logits(params, x), jnp.float32(0.0)
+
+    def init_cache(self, batch_size: int, max_seq: int):
+        cfg = self.cfg
+        L = cfg.n_layers
+        state = jnp.zeros((L, batch_size, cfg.ssm_heads, cfg.ssm_state,
+                           cfg.ssm_head_dim), jnp.float32)
+        conv = jnp.zeros((L, batch_size, cfg.ssm_conv - 1,
+                          cfg.d_inner + 2 * cfg.ssm_state), cfg.adtype)
+        return SSMCache(state, conv)
+
+    def cache_specs(self):
+        return SSMCache(param_spec((None, "batch", "heads", None, None)),
+                        param_spec((None, "batch", None, "inner")))
+
+    def prefill(self, params, batch, cache):
+        x = self.embed_tokens(params, batch["tokens"])
+
+        def body(carry, xs):
+            bp, cache_l = xs
+            y, new_cache = mamba_block(bp, carry, self.cfg, cache_l)
+            return y, new_cache
+
+        body = remat_wrap(body, self.cfg.remat)
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+        return self.logits(params, x[:, -1:, :]), new_cache
+
+    def decode_step(self, params, cache, pos, tokens):
+        x = self.embed_tokens(params, tokens)
+
+        def body(carry, xs):
+            bp, cache_l = xs
+            y, new_cache = mamba_block(bp, carry, self.cfg, cache_l,
+                                       decode=True)
+            return y, new_cache
+
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+        return self.logits(params, x), new_cache

@@ -1,0 +1,171 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-bounded grouped
+dispatch (GShard/Switch style, the TPU-native einsum formulation).
+
+Tokens are processed in groups (``moe_group_size``) that stay aligned with
+the data shards; per group we build a (g, E, C) dispatch one-hot and move
+tokens to experts with einsums — GSPMD turns the expert-sharded einsums into
+all-to-alls on the `model` axis (expert parallelism).  Tokens overflowing an
+expert's capacity C = g·k/E·cf are dropped (residual passes through), the
+standard trade at this scale.
+
+Expert weights (E, d, f): experts shard over `model` when E divides the axis
+(arctic: 128/16); otherwise the FFN dim shards instead (grok: 8 experts on a
+16-way axis → f=32768 shards 2048/device).  Arctic's parallel dense-residual
+MLP is included when ``moe_dense_residual`` is set.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.api import ModelConfig
+from repro.models.layers import dense, init_dense
+from repro.models.sharding import logical_spec, param_spec, shard
+
+__all__ = ["init_moe", "moe_ffn", "moe_specs"]
+
+
+def init_moe(key, cfg: ModelConfig):
+    E, d, f = cfg.moe_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 5)
+    dt = cfg.pdtype
+    p = {
+        "router": init_dense(ks[0], d, E, jnp.float32),  # router stays f32
+        "wi_gate": (jax.random.normal(ks[1], (E, d, f)) * d ** -0.5).astype(dt),
+        "wi_up": (jax.random.normal(ks[2], (E, d, f)) * d ** -0.5).astype(dt),
+        "wo": (jax.random.normal(ks[3], (E, f, d)) * f ** -0.5).astype(dt),
+    }
+    if cfg.moe_dense_residual:
+        from repro.models.layers import init_mlp
+        p["dense_residual"] = init_mlp(ks[4], d, f, dt, kind="swiglu")
+    return p
+
+
+def _expert_axes(cfg: ModelConfig):
+    """(expert_axis, shard_ff_too): where the expert dim shards.
+
+    Default rules put experts on `model`.  The expert-parallel-over-data
+    variant (rules["experts"]="data", §Perf iteration 6) makes expert
+    weights stationary 256-way — E over `data`, d_ff over `model` — so
+    *tokens* move (all-to-all) instead of weights (FSDP all-gather), and
+    expert grads are born fully sharded."""
+    from repro.models.sharding import axis_rules
+    mesh = jax.sharding.get_abstract_mesh()
+    sizes = dict(mesh.shape) if mesh is not None and not mesh.empty else {}
+    target = axis_rules().rules.get("experts")
+    axes = (target,) if isinstance(target, str) else (target or ())
+    axes = tuple(a for a in axes if a in sizes)
+    ways = 1
+    for a in axes:
+        ways *= sizes[a]
+    if axes and cfg.moe_experts % ways == 0:
+        ff_axis = axis_rules().rules.get("ff")
+        shard_ff = (ff_axis in sizes) and (ff_axis not in axes) \
+            and cfg.d_ff % sizes.get(ff_axis, 1) == 0
+        return axes, shard_ff
+    return None, False
+
+
+def moe_specs(cfg: ModelConfig, stacked: bool = True):
+    """PartitionSpecs; resolve under an active mesh."""
+    e_axes, shard_ff = _expert_axes(cfg)
+    if e_axes is not None:
+        e = e_axes if len(e_axes) > 1 else e_axes[0]
+        f = "model" if shard_ff else None
+        from jax.sharding import PartitionSpec
+        w_spec = PartitionSpec(e, None, f)
+        wo_spec = PartitionSpec(e, f, None)
+    else:
+        w_spec = param_spec((None, None, "ff"))
+        wo_spec = param_spec((None, "ff", None))
+    lead = (None,) if stacked else ()
+    pad = lambda s: P(*(lead + tuple(s)))
+    specs = {
+        "router": pad(param_spec((None, None))),
+        "wi_gate": pad(w_spec),
+        "wi_up": pad(w_spec),
+        "wo": pad(wo_spec),
+    }
+    if cfg.moe_dense_residual:
+        specs["dense_residual"] = {
+            "wi_gate": pad(param_spec((None, "ff"))),
+            "wi_up": pad(param_spec((None, "ff"))),
+            "wo": pad(param_spec(("ff", None))),
+        }
+    return specs
+
+
+def moe_ffn(params, x: jnp.ndarray, cfg: ModelConfig):
+    """x: (B, S, d) → (y, aux_loss).  Grouped top-k dispatch."""
+    B, S, d = x.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    tokens = B * S
+    g = min(cfg.moe_group_size, tokens)
+    n_groups = -(-tokens // g)
+    pad = n_groups * g - tokens
+    xt = x.reshape(tokens, d)
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    xg = xt.reshape(n_groups, g, d)
+    xg = shard(xg, "batch", None, None)  # groups follow the data shards
+
+    C = max(int(g * k / E * cfg.moe_capacity_factor), 1)
+
+    logits = jnp.einsum("Ggd,de->Gge", xg.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, g, E)
+    gate_vals, idx = jax.lax.top_k(probs, k)  # (G, g, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert, FIFO per group
+    sel = jax.nn.one_hot(idx, E, dtype=jnp.int32)  # (G, g, k, E)
+    flat = sel.reshape(n_groups, g * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat  # (G, g*k, E)
+    pos = jnp.sum(pos * flat, axis=-1).reshape(n_groups, g, k)  # (G, g, k)
+    keep = pos < C
+
+    # dispatch/combine tensors: (G, g, E, C)
+    pos_oh = jax.nn.one_hot(pos, C, dtype=xg.dtype) * keep[..., None].astype(xg.dtype)
+    disp = jnp.einsum("GgkE,Ggkc->GgEc", sel.astype(xg.dtype), pos_oh)
+    comb = jnp.einsum("Ggk,GgkE,Ggkc->GgEc",
+                      gate_vals.astype(xg.dtype), sel.astype(xg.dtype), pos_oh)
+
+    dt = xg.dtype  # bf16 wires/accumulators across the expert-parallel axis
+    expert_in = jnp.einsum("GgEc,Ggd->GEcd", disp, xg,
+                           preferred_element_type=dt)
+    # when experts shard over a batch axis (expert-parallel-over-data), the
+    # group dim must release that axis — the constraint below is the
+    # all-to-all boundary where tokens move to their experts
+    from repro.models.sharding import axis_rules
+    e_rule = axis_rules().rules.get("experts")
+    e_axes = {e_rule} if isinstance(e_rule, str) else set(e_rule or ())
+    b_rule = axis_rules().rules.get("batch")
+    b_axes = {b_rule} if isinstance(b_rule, str) else set(b_rule or ())
+    if e_axes & b_axes:
+        expert_in = shard(expert_in, None, "experts", None, None)
+    else:
+        expert_in = shard(expert_in, "batch", "experts", None, None)
+    h = jax.nn.silu(jnp.einsum("GEcd,Edf->GEcf", expert_in,
+                               params["wi_gate"].astype(dt),
+                               preferred_element_type=dt)) \
+        * jnp.einsum("GEcd,Edf->GEcf", expert_in,
+                     params["wi_up"].astype(dt), preferred_element_type=dt)
+    if e_axes & b_axes:
+        h = shard(h, None, "experts", None, "ff")
+    else:
+        h = shard(h, "batch", "experts", None, None)
+    out_e = jnp.einsum("GEcf,Efd->GEcd", h, params["wo"].astype(dt),
+                       preferred_element_type=dt)
+    y = jnp.einsum("GgEc,GEcd->Ggd", comb, out_e, preferred_element_type=dt)
+    y = y.reshape(n_groups * g, d)[:tokens].reshape(B, S, d)
+
+    if cfg.moe_dense_residual:
+        from repro.models.layers import mlp
+        y = y + mlp(params["dense_residual"], x, kind="swiglu")
+
+    # Switch-style load-balance aux loss
+    me = probs.mean(axis=1)  # (G, E) mean router prob
+    ce = sel.astype(jnp.float32).sum(axis=2).mean(axis=1)  # (G, E) token frac·k
+    aux = (E / k) * jnp.mean(jnp.sum(me * ce, axis=-1))
+    return y.astype(x.dtype), aux

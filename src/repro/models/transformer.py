@@ -1,0 +1,201 @@
+"""Dense / MoE decoder-only LM (olmo, granite, deepseek, qwen3, arctic, grok).
+
+Layers are stacked (leading L axis) and executed with ``lax.scan`` so HLO
+size is depth-independent — essential for 62-layer models lowered against a
+512-device mesh.  Remat wraps the scan body per ``cfg.remat``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.api import ModelConfig
+from repro.models.layers import (
+    KVCache,
+    apply_norm,
+    attention,
+    init_attention,
+    init_mlp,
+    make_norm,
+    mlp,
+)
+from repro.models.moe import init_moe, moe_ffn, moe_specs
+from repro.models.sharding import param_spec, shard
+
+__all__ = ["DecoderLM", "remat_wrap", "stack_layer_specs"]
+
+
+def remat_wrap(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)  # "full": save nothing
+
+
+def stack_layer_specs(spec_tree):
+    """Prepend the stacked-layer axis (replicated) to every leaf spec."""
+    return jax.tree.map(lambda s: P(*((None,) + tuple(s))), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+class DecoderLM:
+    def __init__(self, cfg: ModelConfig):
+        if cfg.family not in ("dense", "moe"):
+            raise ValueError(cfg.family)
+        self.cfg = cfg
+
+    # ------------------------------------------------------------ params --
+    def _init_block(self, key):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        p = {
+            "ln1": make_norm(cfg.norm_type, cfg.d_model, cfg.pdtype),
+            "attn": init_attention(k1, cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.hd, cfg.pdtype,
+                                   cfg.qk_norm),
+            "ln2": make_norm(cfg.norm_type, cfg.d_model, cfg.pdtype),
+        }
+        if cfg.moe_experts:
+            p["moe"] = init_moe(k2, cfg)
+        else:
+            p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.pdtype,
+                                cfg.mlp_kind)
+        return p
+
+    def init_params(self, key):
+        cfg = self.cfg
+        ke, kb, kh = jax.random.split(key, 3)
+        blocks = jax.vmap(self._init_block)(jax.random.split(kb, cfg.n_layers))
+        return {
+            "embed": (jax.random.normal(ke, (cfg.vocab_padded, cfg.d_model))
+                      * cfg.d_model ** -0.5).astype(cfg.pdtype),
+            "blocks": blocks,
+            "final_norm": make_norm(cfg.norm_type, cfg.d_model, cfg.pdtype),
+            "head": (jax.random.normal(kh, (cfg.d_model, cfg.vocab_padded))
+                     * cfg.d_model ** -0.5).astype(cfg.pdtype),
+        }
+
+    def _block_specs(self):
+        cfg = self.cfg
+        from repro.models.layers import attn_specs
+        s = {
+            "ln1": param_spec((None,)),
+            "attn": attn_specs(cfg.qk_norm),
+            "ln2": param_spec((None,)),
+        }
+        if cfg.moe_experts:
+            s["moe"] = moe_specs(cfg, stacked=False)
+        else:
+            s["mlp"] = {
+                "wi_gate": param_spec((None, "ff")),
+                "wi_up": param_spec((None, "ff")),
+                "wo": param_spec(("ff", None)),
+            } if cfg.mlp_kind == "swiglu" else {
+                "wi": param_spec((None, "ff")),
+                "wo": param_spec(("ff", None)),
+            }
+        return s
+
+    def param_specs(self):
+        return {
+            "embed": param_spec(("vocab", None)),
+            "blocks": stack_layer_specs(self._block_specs()),
+            "final_norm": param_spec((None,)),
+            "head": param_spec((None, "vocab")),
+        }
+
+    # ------------------------------------------------------------ blocks --
+    def _block(self, bp, x, cache=None, cache_pos=None):
+        cfg = self.cfg
+        from repro.models.sharding import constrain_tree
+        bp = constrain_tree(bp, self._block_specs())  # pin per-layer FSDP
+        h = apply_norm(cfg.norm_type, x, bp["ln1"])
+        a, new_cache = attention(
+            bp["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.hd, rope_theta=cfg.rope_theta, causal=True,
+            cache=cache, cache_pos=cache_pos, impl=cfg.attention_impl,
+            chunk=cfg.attn_chunk, qk_norm=cfg.qk_norm)
+        x = x + a
+        h = apply_norm(cfg.norm_type, x, bp["ln2"])
+        if cfg.moe_experts:
+            m, aux = moe_ffn(bp["moe"], h, cfg)
+        else:
+            m, aux = mlp(bp["mlp"], h, cfg.mlp_kind), jnp.float32(0.0)
+        x = x + m
+        x = shard(x, "batch", "seq", None)
+        return x, new_cache, aux
+
+    # ----------------------------------------------------------- forward --
+    def embed_tokens(self, params, tokens):
+        from repro.models.layers import embed_lookup
+        x = embed_lookup(params["embed"], tokens, self.cfg.adtype)
+        return shard(x, "batch", "seq", None)
+
+    def logits(self, params, x):
+        x = apply_norm(self.cfg.norm_type, x, params["final_norm"])
+        out = jnp.einsum("bsd,dv->bsv", x, params["head"],
+                         preferred_element_type=jnp.float32)
+        return shard(out, "batch", None, "vocab")  # vocab-parallel logits (CE reduces over V)
+
+    def forward(self, params, batch):
+        """(logits, aux_loss) over the full sequence (training path)."""
+        x = self.embed_tokens(params, batch["tokens"])
+
+        def body(carry, bp):
+            y, _, aux = self._block(bp, carry)
+            return y, aux
+
+        body = remat_wrap(body, self.cfg.remat)
+        if self.cfg.scan_layers:
+            x, auxes = jax.lax.scan(body, x, params["blocks"])
+            aux = jnp.sum(auxes)
+        else:
+            aux = jnp.float32(0.0)
+            for l in range(self.cfg.n_layers):
+                bp = jax.tree.map(lambda a: a[l], params["blocks"])
+                x, a = body(x, bp)
+                aux = aux + a
+        from repro.models.layers import cotangent_cast
+        x = cotangent_cast(x)  # keep the backward at activation dtype
+        return self.logits(params, x), aux
+
+    # ------------------------------------------------------------- cache --
+    def init_cache(self, batch_size: int, max_seq: int):
+        cfg = self.cfg
+        shape = (cfg.n_layers, batch_size, max_seq, cfg.n_kv_heads * cfg.hd)
+        z = jnp.zeros(shape, dtype=cfg.adtype)
+        return KVCache(z, z)
+
+    def cache_specs(self):
+        spec = param_spec((None, "batch", None, "kv_heads"))
+        return KVCache(spec, spec)
+
+    def prefill(self, params, batch, cache):
+        """Full-prompt pass writing the cache; returns (last_logits, cache)."""
+        x = self.embed_tokens(params, batch["tokens"])
+        pos = jnp.int32(0)
+
+        def body(carry, xs):
+            bp, cache_l = xs
+            y, new_cache, _ = self._block(bp, carry, cache_l, pos)
+            return y, new_cache
+
+        body = remat_wrap(body, self.cfg.remat)
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+        return self.logits(params, x[:, -1:, :]), new_cache
+
+    def decode_step(self, params, cache, pos, tokens):
+        """tokens: (B, 1) → (logits (B,1,V), new cache)."""
+        x = self.embed_tokens(params, tokens)
+
+        def body(carry, xs):
+            bp, cache_l = xs
+            y, new_cache, _ = self._block(bp, carry, cache_l, pos)
+            return y, new_cache
+
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+        return self.logits(params, x), new_cache

@@ -1,0 +1,159 @@
+"""Llama-3.2-Vision-style VLM: dense decoder backbone with gated
+cross-attention layers to image patch embeddings every
+``cross_attn_every`` self-attention layers.
+
+The vision tower is a STUB per the assignment: ``batch["image_embeds"]``
+carries precomputed (B, n_image_tokens, d_model) patch embeddings (the
+dry-run's ``input_specs`` provides the ShapeDtypeStruct).  Cross-attn K/V are
+computed once (prefill) and cached for decode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import ModelConfig
+from repro.models.layers import (
+    KVCache, apply_norm, attention, init_attention, make_norm,
+)
+from repro.models.sharding import param_spec, shard
+from repro.models.transformer import DecoderLM, remat_wrap, stack_layer_specs
+
+__all__ = ["VisionLM", "VLMCache"]
+
+
+@dataclasses.dataclass
+class VLMCache:
+    self_attn: KVCache  # (L, B, S, K, hd)
+    cross: KVCache  # (n_cross, B, n_img, K, hd)
+
+
+jax.tree_util.register_dataclass(VLMCache, data_fields=["self_attn", "cross"],
+                                 meta_fields=[])
+
+
+class VisionLM(DecoderLM):
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.cross_attn_every > 0 and cfg.n_image_tokens > 0
+        self.cfg = cfg  # (bypasses DecoderLM.__init__ family check)
+
+    @property
+    def n_cross(self) -> int:
+        return -(-self.cfg.n_layers // self.cfg.cross_attn_every)
+
+    def _group(self, s: int) -> tuple[int, int]:
+        lo = s * self.cfg.cross_attn_every
+        return lo, min(lo + self.cfg.cross_attn_every, self.cfg.n_layers)
+
+    def _init_cross(self, key):
+        cfg = self.cfg
+        return {
+            "ln": make_norm(cfg.norm_type, cfg.d_model, cfg.pdtype),
+            "attn": init_attention(key, cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.hd, cfg.pdtype),
+            "gate": jnp.zeros((), cfg.pdtype),  # tanh-gated residual
+        }
+
+    def init_params(self, key):
+        base = super().init_params(key)
+        kc = jax.random.fold_in(key, 7)
+        base["cross"] = jax.vmap(self._init_cross)(
+            jax.random.split(kc, self.n_cross))
+        return base
+
+    def param_specs(self):
+        specs = super().param_specs()
+        from repro.models.layers import attn_specs
+        specs["cross"] = stack_layer_specs({
+            "ln": param_spec((None,)),
+            "attn": attn_specs(),
+            "gate": param_spec(()),
+        })
+        return specs
+
+    def _cross_block(self, cp, x, image_embeds=None, cache=None):
+        cfg = self.cfg
+        h = apply_norm(cfg.norm_type, x, cp["ln"])
+        a, new_cache = attention(
+            cp["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.hd, rope_theta=None, causal=False,
+            cache=cache, cache_pos=None, kv_source=image_embeds,
+            impl="reference", chunk=cfg.attn_chunk)
+        x = x + jnp.tanh(cp["gate"].astype(jnp.float32)).astype(x.dtype) * a
+        return shard(x, "batch", "seq", None), new_cache
+
+    def _run(self, params, x, image_embeds=None, caches=None, cache_pos=None):
+        cfg = self.cfg
+        new_self, new_cross = [], []
+        for s in range(self.n_cross):
+            cp = jax.tree.map(lambda a: a[s], params["cross"])
+            cross_cache = None
+            if caches is not None and image_embeds is None:
+                cross_cache = jax.tree.map(lambda a: a[s], caches.cross)
+            x, nc = self._cross_block(cp, x, image_embeds, cross_cache)
+            if nc is None and image_embeds is not None and caches is not None:
+                # prefill: cache the image K/V for decode (flat layout)
+                k = (image_embeds @ cp["attn"]["wk"]).astype(cfg.adtype)
+                v = (image_embeds @ cp["attn"]["wv"]).astype(cfg.adtype)
+                nc = KVCache(k, v)
+            new_cross.append(nc)
+            lo, hi = self._group(s)
+            group = jax.tree.map(lambda a: a[lo:hi], params["blocks"])
+            if caches is None:
+                def body(carry, bp):
+                    y, _, _ = self._block(bp, carry)
+                    return y, None
+                body = remat_wrap(body, cfg.remat)
+                x, _ = jax.lax.scan(body, x, group)
+            else:
+                grp_cache = jax.tree.map(lambda a: a[lo:hi], caches.self_attn)
+
+                def body(carry, xs):
+                    bp, cl = xs
+                    y, nc2, _ = self._block(bp, carry, cl, cache_pos)
+                    return y, nc2
+                if x.shape[1] > 1:
+                    body = remat_wrap(body, cfg.remat)
+                x, grp_new = jax.lax.scan(body, x, (group, grp_cache))
+                new_self.append(grp_new)
+        if caches is None:
+            return x, None
+        sa = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *new_self)
+        cr = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *new_cross)
+        return x, VLMCache(sa, cr)
+
+    def forward(self, params, batch):
+        x = self.embed_tokens(params, batch["tokens"])
+        img = batch["image_embeds"].astype(self.cfg.adtype)
+        x, _ = self._run(params, x, image_embeds=img)
+        from repro.models.layers import cotangent_cast
+        x = cotangent_cast(x)  # keep the backward at activation dtype
+        return self.logits(params, x), jnp.float32(0.0)
+
+    def init_cache(self, batch_size: int, max_seq: int):
+        cfg = self.cfg
+        kvd = cfg.n_kv_heads * cfg.hd
+        z = jnp.zeros((cfg.n_layers, batch_size, max_seq, kvd), cfg.adtype)
+        zc = jnp.zeros((self.n_cross, batch_size, cfg.n_image_tokens, kvd),
+                       cfg.adtype)
+        return VLMCache(KVCache(z, z), KVCache(zc, zc))
+
+    def cache_specs(self):
+        s = param_spec((None, "batch", None, "kv_heads"))
+        return VLMCache(KVCache(s, s), KVCache(s, s))
+
+    def prefill(self, params, batch, cache):
+        x = self.embed_tokens(params, batch["tokens"])
+        img = batch["image_embeds"].astype(self.cfg.adtype)
+        x, new_cache = self._run(params, x, image_embeds=img, caches=cache,
+                                 cache_pos=jnp.int32(0))
+        return self.logits(params, x[:, -1:, :]), new_cache
+
+    def decode_step(self, params, cache, pos, tokens):
+        x = self.embed_tokens(params, tokens)
+        x, new_cache = self._run(params, x, image_embeds=None, caches=cache,
+                                 cache_pos=pos)
+        return self.logits(params, x), new_cache

@@ -1,0 +1,232 @@
+"""Whisper-large-v3-style encoder-decoder backbone (arXiv:2212.04356).
+
+The conv/mel frontend is a STUB per the assignment: ``batch["audio_frames"]``
+carries precomputed (B, n_audio_frames, d_model) frame embeddings.  The
+encoder is bidirectional self-attention (GELU MLPs, learned-free sinusoid-less
+stub positions via rope=None + absolute embeddings omitted — backbone only);
+the decoder interleaves causal self-attention and cross-attention to the
+encoder output.  decode_32k exercises the decoder step with a 32k self-attn
+KV cache per the assignment (the real model caps at 448 tokens — we lower
+the backbone at the assigned shape).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import ModelConfig
+from repro.models.layers import (
+    KVCache, apply_norm, attention, init_attention, init_mlp, make_norm, mlp,
+)
+from repro.models.sharding import param_spec, shard
+from repro.models.transformer import remat_wrap, stack_layer_specs
+
+__all__ = ["EncDecLM", "EncDecCache"]
+
+
+@dataclasses.dataclass
+class EncDecCache:
+    self_attn: KVCache  # (L, B, S_max, K, hd) decoder self-attn
+    cross: KVCache  # (L, B, n_frames, K, hd) precomputed encoder K/V
+
+
+jax.tree_util.register_dataclass(EncDecCache,
+                                 data_fields=["self_attn", "cross"],
+                                 meta_fields=[])
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.encoder_layers > 0 and cfg.n_audio_frames > 0
+        self.cfg = cfg
+
+    # ------------------------------------------------------------ params --
+    def _init_enc_block(self, key):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": make_norm(cfg.norm_type, cfg.d_model, cfg.pdtype),
+            "attn": init_attention(k1, cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.hd, cfg.pdtype),
+            "ln2": make_norm(cfg.norm_type, cfg.d_model, cfg.pdtype),
+            "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.pdtype, "gelu"),
+        }
+
+    def _init_dec_block(self, key):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "ln1": make_norm(cfg.norm_type, cfg.d_model, cfg.pdtype),
+            "self_attn": init_attention(k1, cfg.d_model, cfg.n_heads,
+                                        cfg.n_kv_heads, cfg.hd, cfg.pdtype),
+            "ln_x": make_norm(cfg.norm_type, cfg.d_model, cfg.pdtype),
+            "cross_attn": init_attention(k2, cfg.d_model, cfg.n_heads,
+                                         cfg.n_kv_heads, cfg.hd, cfg.pdtype),
+            "ln2": make_norm(cfg.norm_type, cfg.d_model, cfg.pdtype),
+            "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.pdtype, "gelu"),
+        }
+
+    def init_params(self, key):
+        cfg = self.cfg
+        ke, kenc, kdec, kh = jax.random.split(key, 4)
+        return {
+            "embed": (jax.random.normal(ke, (cfg.vocab_padded, cfg.d_model))
+                      * cfg.d_model ** -0.5).astype(cfg.pdtype),
+            "encoder": jax.vmap(self._init_enc_block)(
+                jax.random.split(kenc, cfg.encoder_layers)),
+            "decoder": jax.vmap(self._init_dec_block)(
+                jax.random.split(kdec, cfg.n_layers)),
+            "enc_norm": make_norm(cfg.norm_type, cfg.d_model, cfg.pdtype),
+            "final_norm": make_norm(cfg.norm_type, cfg.d_model, cfg.pdtype),
+            "head": (jax.random.normal(kh, (cfg.d_model, cfg.vocab_padded))
+                     * cfg.d_model ** -0.5).astype(cfg.pdtype),
+        }
+
+    def _attn_specs(self):
+        from repro.models.layers import attn_specs
+        return attn_specs()
+
+    def param_specs(self):
+        mlp_s = {"wi": param_spec((None, "ff")), "wo": param_spec(("ff", None))}
+        enc = stack_layer_specs({
+            "ln1": param_spec((None,)), "attn": self._attn_specs(),
+            "ln2": param_spec((None,)), "mlp": mlp_s,
+        })
+        dec = stack_layer_specs({
+            "ln1": param_spec((None,)), "self_attn": self._attn_specs(),
+            "ln_x": param_spec((None,)), "cross_attn": self._attn_specs(),
+            "ln2": param_spec((None,)), "mlp": mlp_s,
+        })
+        return {
+            "embed": param_spec(("vocab", None)),
+            "encoder": enc,
+            "decoder": dec,
+            "enc_norm": param_spec((None,)),
+            "final_norm": param_spec((None,)),
+            "head": param_spec((None, "vocab")),
+        }
+
+    # ------------------------------------------------------------ pieces --
+    def encode(self, params, audio_frames):
+        cfg = self.cfg
+        x = audio_frames.astype(cfg.adtype)
+        x = shard(x, "batch", "seq", None)
+
+        def body(carry, bp):
+            h = apply_norm(cfg.norm_type, carry, bp["ln1"])
+            a, _ = attention(bp["attn"], h, n_heads=cfg.n_heads,
+                             n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+                             rope_theta=cfg.rope_theta, causal=False,
+                             impl="reference", chunk=cfg.attn_chunk)
+            y = carry + a
+            h = apply_norm(cfg.norm_type, y, bp["ln2"])
+            y = y + mlp(bp["mlp"], h, "gelu")
+            return shard(y, "batch", "seq", None), None
+
+        body = remat_wrap(body, cfg.remat)
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+        return apply_norm(cfg.norm_type, x, params["enc_norm"])
+
+    def _dec_block(self, bp, x, enc_out=None, self_cache=None, cache_pos=None,
+                   cross_cache=None):
+        cfg = self.cfg
+        h = apply_norm(cfg.norm_type, x, bp["ln1"])
+        a, new_self = attention(
+            bp["self_attn"], h, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+            rope_theta=cfg.rope_theta, causal=True, cache=self_cache,
+            cache_pos=cache_pos, impl=cfg.attention_impl, chunk=cfg.attn_chunk)
+        x = x + a
+        h = apply_norm(cfg.norm_type, x, bp["ln_x"])
+        a, _ = attention(
+            bp["cross_attn"], h, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd, rope_theta=None,
+            causal=False, cache=cross_cache, cache_pos=None,
+            kv_source=enc_out, impl="reference", chunk=cfg.attn_chunk)
+        x = x + a
+        h = apply_norm(cfg.norm_type, x, bp["ln2"])
+        x = x + mlp(bp["mlp"], h, "gelu")
+        return shard(x, "batch", "seq", None), new_self
+
+    def embed_tokens(self, params, tokens):
+        from repro.models.layers import embed_lookup
+        x = embed_lookup(params["embed"], tokens, self.cfg.adtype)
+        return shard(x, "batch", "seq", None)
+
+    def logits(self, params, x):
+        x = apply_norm(self.cfg.norm_type, x, params["final_norm"])
+        out = jnp.einsum("bsd,dv->bsv", x, params["head"],
+                         preferred_element_type=jnp.float32)
+        return shard(out, "batch", None, "vocab")  # vocab-parallel logits (CE reduces over V)
+
+    # -------------------------------------------------------------- API ---
+    def forward(self, params, batch):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["audio_frames"])
+        x = self.embed_tokens(params, batch["tokens"])
+
+        def body(carry, bp):
+            y, _ = self._dec_block(bp, carry, enc_out=enc_out)
+            return y, None
+
+        body = remat_wrap(body, cfg.remat)
+        x, _ = jax.lax.scan(body, x, params["decoder"])
+        from repro.models.layers import cotangent_cast
+        x = cotangent_cast(x)  # keep the backward at activation dtype
+        return self.logits(params, x), jnp.float32(0.0)
+
+    def init_cache(self, batch_size: int, max_seq: int):
+        cfg = self.cfg
+        kvd = cfg.n_kv_heads * cfg.hd
+        z = jnp.zeros((cfg.n_layers, batch_size, max_seq, kvd), cfg.adtype)
+        zc = jnp.zeros((cfg.n_layers, batch_size, cfg.n_audio_frames, kvd),
+                       cfg.adtype)
+        return EncDecCache(KVCache(z, z), KVCache(zc, zc))
+
+    def cache_specs(self):
+        s = param_spec((None, "batch", None, "kv_heads"))
+        return EncDecCache(KVCache(s, s), KVCache(s, s))
+
+    def prefill(self, params, batch, cache):
+        """Encode audio, precompute cross K/V, prefill decoder self-cache."""
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["audio_frames"])
+
+        def cross_kv(bp):
+            # flat (B, S_frames, K·hd) layout, matching KVCache
+            k = (enc_out @ bp["cross_attn"]["wk"]).astype(cfg.adtype)
+            v = (enc_out @ bp["cross_attn"]["wv"]).astype(cfg.adtype)
+            return KVCache(k, v)
+
+        cross = jax.vmap(cross_kv)(params["decoder"])
+        x = self.embed_tokens(params, batch["tokens"])
+        pos = jnp.int32(0)
+
+        def body(carry, xs):
+            bp, self_l, cross_l = xs
+            y, new_self = self._dec_block(bp, carry, enc_out=None,
+                                          self_cache=self_l, cache_pos=pos,
+                                          cross_cache=cross_l)
+            return y, new_self
+
+        body = remat_wrap(body, cfg.remat)
+        x, new_self = jax.lax.scan(
+            body, x, (params["decoder"], cache.self_attn, cross))
+        return self.logits(params, x[:, -1:, :]), EncDecCache(new_self, cross)
+
+    def decode_step(self, params, cache, pos, tokens):
+        x = self.embed_tokens(params, tokens)
+
+        def body(carry, xs):
+            bp, self_l, cross_l = xs
+            y, new_self = self._dec_block(bp, carry, enc_out=None,
+                                          self_cache=self_l, cache_pos=pos,
+                                          cross_cache=cross_l)
+            return y, new_self
+
+        x, new_self = jax.lax.scan(
+            body, x, (params["decoder"], cache.self_attn, cache.cross))
+        return self.logits(params, x), EncDecCache(new_self, cache.cross)

@@ -1,0 +1,5 @@
+from repro.perf.hlo import CollectiveStats, parse_collectives
+from repro.perf.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, RooflineTerms, compute_terms
+
+__all__ = ["CollectiveStats", "parse_collectives", "RooflineTerms",
+           "compute_terms", "PEAK_FLOPS", "HBM_BW", "ICI_BW"]

@@ -1,0 +1,396 @@
+"""Post-SPMD HLO module analysis: trip-count-aware FLOPs, HBM-traffic and
+collective-traffic extraction.
+
+Why not ``compiled.cost_analysis()``: XLA's entry-point cost analysis counts
+a ``while`` body ONCE, but our models scan over layers — a 62-layer model
+would be under-counted 62×.  Compiled HLO annotates every while with
+``backend_config={"known_trip_count":{"n":…}}``, so we parse the module
+text, build the computation call graph, and weight every computation by its
+execution count.
+
+Accounting rules (per device — post-SPMD shapes are per-device):
+  * FLOPs: dot = 2·|result|·K (K from lhs shape × lhs_contracting_dims);
+    reduce/reduce-window = |operand|; everything else ≈ 0.
+  * HBM bytes: at fusion boundaries — a fusion reads its operands and writes
+    its result; internals live in registers/VMEM.  dynamic-slice counts
+    2·|slice|, dynamic-update-slice 2·|update| (not the whole buffer).
+  * Collective wire bytes (ring model, per participating device):
+      all-reduce 2·B·(n−1)/n, all-gather B_out·(n−1)/n,
+      reduce-scatter B_in·(n−1)/n, all-to-all B·(n−1)/n, permute B.
+All three are multiplied by the enclosing loops' trip counts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+__all__ = ["CollectiveStats", "ModuleStats", "analyze_module",
+           "parse_collectives", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*(?:e[0-9a-z]+)?)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(
+    r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*(.+?)\s*\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s*([a-z][a-zA-Z0-9\-]*)\(")
+_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*((?:\([^)]*\))|(?:[^,()]+))")
+_TRIP_RE = re.compile(r'known_trip_count[="\s{:n]+(\d+)')
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def _first_shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+def _shape_elems(type_str: str) -> int:
+    n = 0
+    for _, dims in _SHAPE_RE.findall(type_str):
+        k = 1
+        if dims:
+            for d in dims.split(","):
+                k *= int(d)
+        n += k
+    return n
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("},")[0].strip("{}")
+        return len(first.split(",")) if first else 1
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 1
+
+
+def _operands(line: str) -> list[str]:
+    """%refs inside the first top-level parentheses after the opcode."""
+    start = line.find("(", line.find("=") + 1)
+    # find opcode-paren: first '(' after the '= TYPE OPCODE' section — use
+    # the paren belonging to the opcode matched by _INSTR_RE
+    m = _INSTR_RE.match(line)
+    if not m:
+        return []
+    idx = m.end() - 1
+    depth = 0
+    out = []
+    buf = ""
+    for ch in line[idx:]:
+        if ch == "(":
+            depth += 1
+            if depth == 1:
+                continue
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                buf += "\0"
+                break
+        buf += ch
+    for ref in re.findall(r"%([\w.\-]+)", buf):
+        out.append(ref)
+    return out
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    type_str: str
+    op: str
+    line: str
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    is_entry: bool
+    params: dict
+    instrs: list
+    types: dict  # name -> type_str (params + defs)
+
+
+def _parse_computations(text: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr:
+            params = {}
+            for pname, ptype in _PARAM_RE.findall(hdr.group(3)):
+                params[pname] = ptype.strip()
+            cur = _Comp(hdr.group(2), bool(hdr.group(1)), params, [],
+                        dict(params))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            ins = _Instr(m.group(1), m.group(2), m.group(3), line)
+            cur.instrs.append(ins)
+            cur.types[ins.name] = ins.type_str
+    return comps
+
+
+def _instr_flops(ins: _Instr, comp: _Comp) -> float:
+    if ins.op == "dot":
+        result = 1
+        for d in _first_shape_dims(ins.type_str):
+            result *= d
+        ops = _operands(ins.line)
+        k = 1
+        cd = _CDIMS_RE.search(ins.line)
+        if ops and cd is not None:
+            lhs_t = comp.types.get(ops[0], "")
+            dims = _first_shape_dims(lhs_t)
+            for i in (cd.group(1).split(",") if cd.group(1) else []):
+                i = int(i)
+                if i < len(dims):
+                    k *= dims[i]
+        return 2.0 * result * k
+    if ins.op in ("reduce", "reduce-window"):
+        ops = _operands(ins.line)
+        if ops:
+            return float(_shape_elems(comp.types.get(ops[0], "")))
+    if ins.op == "convolution":
+        # rough: 2·|result|·(input feature × window) — fall back to 2·|result|
+        return 2.0 * _shape_elems(ins.type_str)
+    return 0.0
+
+
+_ZERO_BYTE_OPS = {"get-tuple-element", "tuple", "parameter", "bitcast",
+                  "constant", "while", "conditional", "call", "after-all",
+                  "partition-id", "replica-id", "iota", "opt-barrier"}
+
+
+def _instr_bytes(ins: _Instr, comp: _Comp,
+                 comps: dict | None = None) -> float:
+    if ins.op in _ZERO_BYTE_OPS:
+        return 0.0
+    ops = _operands(ins.line)
+    if ins.op == "dynamic-slice":
+        return 2.0 * _shape_bytes(ins.type_str)
+    if ins.op == "dynamic-update-slice":
+        upd = _shape_bytes(comp.types.get(ops[1], "")) if len(ops) > 1 else 0
+        return 2.0 * upd
+    total = float(_shape_bytes(ins.type_str))
+    for o in ops:
+        total += _shape_bytes(comp.types.get(o, ""))
+    if ins.op == "fusion" and comps is not None:
+        # loop-carried in-place updates: a fusion containing a
+        # dynamic-update-slice whose result type matches an operand type is
+        # an aliased carry update — charging the full buffer in AND out per
+        # loop iteration overstates HBM traffic by buffer/update (e.g. a
+        # 62-layer KV-cache stack "touched" whole per layer step).
+        m = _CALL_SINGLE_RE.search(ins.line)
+        callee = comps.get(m.group(1)) if m else None
+        if callee is not None and callee.instrs:
+            has_dus = any(i.op == "dynamic-update-slice"
+                          for i in callee.instrs)
+            result_b = _shape_bytes(ins.type_str)
+            aliases_operand = any(
+                _shape_bytes(comp.types.get(o, "")) == result_b
+                for o in ops)
+            if has_dus and aliases_operand:
+                total -= 2.0 * result_b
+                total = max(total, 0.0)
+    return total
+
+
+def _collective_wire(ins: _Instr, comp: _Comp) -> tuple[str, float, int]:
+    op = ins.op
+    base = op
+    for c in COLLECTIVE_OPS:
+        if op == c or op == c + "-start":
+            base = c
+            break
+    else:
+        return ("", 0.0, 0)
+    if op.endswith("-done"):
+        return ("", 0.0, 0)
+    b = _shape_bytes(ins.type_str)
+    n = _group_size(ins.line)
+    ring = (n - 1) / n if n > 1 else 0.0
+    if base == "all-reduce":
+        wire = 2.0 * b * ring
+    elif base == "all-gather":
+        wire = b * ring
+    elif base == "reduce-scatter":
+        wire = b * n * ring
+    elif base == "all-to-all":
+        wire = b * ring
+    else:  # collective-permute
+        wire = float(b)
+    return (base, wire, b)
+
+
+_CALL_SINGLE_RE = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)")
+_CALL_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _exec_counts(comps: dict[str, _Comp]) -> tuple[dict[str, float], set[str]]:
+    """Execution count per computation + the set of fusion-called comps."""
+    counts: dict[str, float] = defaultdict(float)
+    fusion_called: set[str] = set()
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return counts, fusion_called
+
+    import sys
+    sys.setrecursionlimit(10000)
+    seen_stack: set[str] = set()
+
+    def visit(name: str, mult: float):
+        comp = comps.get(name)
+        if comp is None or name in seen_stack:
+            return
+        counts[name] += mult
+        seen_stack.add(name)
+        for ins in comp.instrs:
+            trip = 1.0
+            if ins.op == "while":
+                m = _TRIP_RE.search(ins.line)
+                trip = float(m.group(1)) if m else 1.0
+            targets = [t.group(1) for t in _CALL_SINGLE_RE.finditer(ins.line)]
+            for br in _CALL_BRANCHES_RE.finditer(ins.line):
+                targets += [t.strip().lstrip("%") for t in
+                            br.group(1).split(",") if t.strip()]
+            for t in targets:
+                if ins.op == "fusion":
+                    fusion_called.add(t)
+                visit(t, mult * (trip if ins.op == "while" else 1.0))
+        seen_stack.discard(name)
+
+    visit(entry.name, 1.0)
+    return counts, fusion_called
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    result_bytes: dict
+    wire_bytes: dict
+    # CPU XLA has no native bf16 dot: it upcasts operands and emits the
+    # partial-sum all-reduce at f32 width.  On TPU the same collective rides
+    # at bf16.  ``tpu_wire_bytes`` halves the wire bytes of f32 collectives
+    # whose producing op is a dot (identified via op_name metadata).
+    dot_f32_wire_bytes: float = 0.0
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return float(sum(self.wire_bytes.values()))
+
+    @property
+    def tpu_wire_bytes(self) -> float:
+        return self.total_wire_bytes - 0.5 * self.dot_f32_wire_bytes
+
+    @property
+    def total_count(self) -> int:
+        return int(sum(self.counts.values()))
+
+    def summary(self) -> dict:
+        return {
+            "counts": {k: int(v) for k, v in self.counts.items()},
+            "result_bytes": {k: float(v) for k, v in self.result_bytes.items()},
+            "wire_bytes": {k: float(v) for k, v in self.wire_bytes.items()},
+            "total_wire_bytes": self.total_wire_bytes,
+            "dot_f32_wire_bytes": float(self.dot_f32_wire_bytes),
+            "tpu_wire_bytes": self.tpu_wire_bytes,
+        }
+
+
+@dataclasses.dataclass
+class ModuleStats:
+    flops: float  # per device, trip-count weighted
+    hbm_bytes: float  # per device, fusion-boundary model
+    collectives: CollectiveStats
+    flagged_bytes: float = 0.0  # bytes of buffers matching flag_trailing_dim
+
+    def summary(self) -> dict:
+        return {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
+                "collectives": self.collectives.summary(),
+                "flagged_bytes": self.flagged_bytes}
+
+
+def analyze_module(text: str, flag_trailing_dim: int | None = None,
+                   flag_min_rank: int = 3) -> ModuleStats:
+    """flag_trailing_dim: additionally accumulate the HBM bytes of buffers
+    whose trailing dimension equals this value (rank ≥ flag_min_rank) —
+    used to identify attention score/probability rows (trailing dim ==
+    kv length), the traffic a fused flash-attention kernel keeps in VMEM."""
+    comps = _parse_computations(text)
+    counts, fusion_called = _exec_counts(comps)
+    flops = 0.0
+    hbm = 0.0
+    flagged = 0.0
+    ccounts: dict[str, float] = defaultdict(float)
+    cresult: dict[str, float] = defaultdict(float)
+    cwire: dict[str, float] = defaultdict(float)
+    dot_f32_wire = 0.0
+    for name, comp in comps.items():
+        mult = counts.get(name, 0.0)
+        if mult <= 0:
+            continue
+        for ins in comp.instrs:
+            flops += mult * _instr_flops(ins, comp)
+            if name not in fusion_called:
+                b = _instr_bytes(ins, comp, comps)
+                hbm += mult * b
+                if flag_trailing_dim is not None and b > 0:
+                    dims = _first_shape_dims(ins.type_str)
+                    if len(dims) >= flag_min_rank and (
+                            dims[-1] == flag_trailing_dim
+                            or (dims[-2] == flag_trailing_dim
+                                and dims[-1] <= 1024)):
+                        # score rows (…, kv) or their bwd transposes
+                        # (…, kv, chunk); activations keep trailing dims
+                        # > 1024 (d_model/d_ff/vocab shards) and stay out
+                        flagged += mult * b
+                base, wire, cb = _collective_wire(ins, comp)
+                if base:
+                    ccounts[base] += mult
+                    cresult[base] += mult * cb
+                    cwire[base] += mult * wire
+                    if "dot_general" in ins.line and " f32[" in \
+                            " " + ins.type_str:
+                        dot_f32_wire += mult * wire
+    stats = CollectiveStats(dict(ccounts), dict(cresult), dict(cwire),
+                            dot_f32_wire)
+    return ModuleStats(flops, hbm, stats, flagged)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Trip-count-aware collective stats (API kept for callers/tests)."""
+    return analyze_module(hlo_text).collectives

@@ -1,0 +1,115 @@
+"""Roofline terms for compiled dry-run artifacts (TPU v5e targets).
+
+Per (arch × shape × mesh) cell:
+
+  compute_s    = HLO_FLOPs   / (chips × 197e12)         [bf16 MXU peak]
+  memory_s     = HLO_bytes   / (chips × 819e9)          [HBM]
+  collective_s = wire_bytes  / (chips × 50e9)           [ICI per link]
+
+``cost_analysis()`` on a post-SPMD module reports *per-device* flops/bytes, so
+terms divide by 1 device; the helpers below normalize either convention via
+``per_device`` — the dry-run stores raw values plus the convention used.
+
+MODEL_FLOPS (6·N·D dense / 6·N_active·D MoE) over HLO_FLOPs measures how much
+compiled compute is useful (catches remat & redundancy waste).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12  # bf16, per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+__all__ = ["RooflineTerms", "compute_terms", "PEAK_FLOPS", "HBM_BW", "ICI_BW"]
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_total: float  # summed over chips
+    hlo_bytes_total: float
+    wire_bytes_per_chip: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower-bound step time: max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — >1 means XLA counted fewer flops than
+        the analytic model (fusions), <1 means remat/redundant compute."""
+        if self.hlo_flops_total <= 0:
+            return 0.0
+        return self.model_flops / self.hlo_flops_total
+
+    @property
+    def mfu_bound(self) -> float:
+        """Achievable MFU upper bound at this placement: useful flops over
+        chips×peak×step_time."""
+        t = self.step_time_s
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * t)
+
+    def row(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "hlo_flops": self.hlo_flops_total,
+            "useful_fraction": self.useful_flops_fraction,
+            "mfu_bound": self.mfu_bound,
+            "step_time_s": self.step_time_s,
+            "chips": self.chips,
+        }
+
+
+def compute_terms(
+    hlo_flops: float,
+    hlo_bytes: float,
+    wire_bytes: float,
+    chips: int,
+    model_flops: float,
+    per_device: bool = True,
+) -> RooflineTerms:
+    """Build roofline terms.
+
+    per_device=True: hlo_flops/hlo_bytes/wire_bytes are per-chip quantities
+    (the post-SPMD convention); False: global quantities divided by chips.
+    """
+    if per_device:
+        flops_total = hlo_flops * chips
+        bytes_total = hlo_bytes * chips
+        wire_per_chip = wire_bytes
+    else:
+        flops_total = hlo_flops
+        bytes_total = hlo_bytes
+        wire_per_chip = wire_bytes / chips
+    return RooflineTerms(
+        compute_s=flops_total / (chips * PEAK_FLOPS),
+        memory_s=bytes_total / (chips * HBM_BW),
+        collective_s=wire_per_chip / ICI_BW,
+        model_flops=model_flops,
+        hlo_flops_total=flops_total,
+        hlo_bytes_total=bytes_total,
+        wire_bytes_per_chip=wire_per_chip,
+        chips=chips,
+    )

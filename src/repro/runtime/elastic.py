@@ -1,0 +1,68 @@
+"""Elastic scaling for the training path: survive pod/slice loss.
+
+Strategy (checkpoint-restart based, the only sound one for synchronous
+SPMD): on failure, rebuild a smaller mesh from the surviving devices,
+restore the latest checkpoint host-side (runtime/checkpoint restores are
+mesh-portable), rescale the global batch to keep per-device work constant
+(or keep global batch and raise grad-accumulation), and continue.
+
+``plan_rescale`` computes the new run configuration; the trainer driver
+(launch/train.py) executes it.  tests/test_elastic.py exercises a full
+kill→shrink→resume cycle on the host platform.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+__all__ = ["RescalePlan", "plan_rescale", "rebuild_mesh"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RescalePlan:
+    old_devices: int
+    new_devices: int
+    data_ways: int
+    model_ways: int
+    global_batch: int
+    grad_accum: int
+    note: str
+
+
+def rebuild_mesh(n_devices: int, model_ways: int) -> jax.sharding.Mesh:
+    if n_devices % model_ways:
+        raise ValueError(f"{n_devices} devices not divisible by model={model_ways}")
+    return jax.make_mesh(
+        (n_devices // model_ways, model_ways), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def plan_rescale(old_devices: int, surviving: int, model_ways: int,
+                 global_batch: int, keep_global_batch: bool = True) -> RescalePlan:
+    """Largest usable device count = biggest multiple of model_ways ≤
+    surviving (tensor-parallel groups must stay whole)."""
+    usable = (surviving // model_ways) * model_ways
+    if usable == 0:
+        raise ValueError("not enough devices for one tensor-parallel group")
+    data_ways = usable // model_ways
+    if keep_global_batch:
+        # keep optimization trajectory comparable: same global batch, more
+        # grad accumulation when per-device batch would not divide
+        accum = 1
+        while global_batch % (data_ways * accum) or \
+                (global_batch // (data_ways * accum)) > 4096:
+            accum += 1
+            if accum > global_batch:
+                accum = 1
+                break
+        gb = global_batch
+        note = f"kept global batch; grad_accum={accum}"
+    else:
+        gb = max((global_batch * usable) // old_devices, data_ways)
+        gb -= gb % data_ways
+        accum = 1
+        note = "scaled global batch with device count"
+    return RescalePlan(old_devices, usable, data_ways, model_ways, gb, accum,
+                       note)

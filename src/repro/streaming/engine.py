@@ -1,0 +1,137 @@
+"""Streaming execution engine: runs a StreamGraph over a device fleet
+according to a fractional Placement (paper §3 made executable).
+
+Each batch flows source→sinks; every operator's rows are split across its
+devices by ``x_{i,u}``, processed per-device (with per-device speed
+modifiers so heterogeneity/stragglers are *felt*, not just modeled), and
+re-partitioned along each edge.  The engine reports BOTH:
+
+  * modeled latency — the paper's cost model on the current fleet state,
+  * observed per-device busy time — fed back into the straggler monitor,
+    which degrades the fleet and re-optimizes placement (runtime loop).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.costmodel import CostConfig, edge_latencies, latency
+from repro.core.devices import ExplicitFleet, RegionFleet
+from repro.core.optimizers import PlacementProblem, greedy_transfer
+from repro.streaming.operators import StreamGraph
+
+__all__ = ["StreamingEngine", "BatchReport"]
+
+
+@dataclasses.dataclass
+class BatchReport:
+    modeled_latency: float
+    edge_latencies: np.ndarray
+    device_busy: np.ndarray  # observed seconds per device
+    rows_in: int
+    rows_out: dict
+    wall_s: float
+
+
+class StreamingEngine:
+    def __init__(self, graph: StreamGraph, fleet, placement: np.ndarray,
+                 alpha: float = 0.0, device_speed: np.ndarray | None = None):
+        self.graph = graph
+        self.fleet = fleet
+        self.x = np.asarray(placement, dtype=np.float64)
+        self.cfg = CostConfig(alpha=alpha)
+        n = fleet.n_devices
+        self.device_speed = (np.ones(n) if device_speed is None
+                             else np.asarray(device_speed, float))
+        self.observed_busy = np.zeros(n)
+
+    # ------------------------------------------------------------ running --
+    def _split_rows(self, rows: np.ndarray, fractions: np.ndarray):
+        """Deterministic proportional row split across devices."""
+        n = len(rows)
+        counts = np.floor(fractions * n).astype(int)
+        rem = n - counts.sum()
+        if rem > 0:
+            order = np.argsort(-(fractions * n - counts))
+            counts[order[:rem]] += 1
+        out, start = {}, 0
+        for u, c in enumerate(counts):
+            if c > 0:
+                out[u] = rows[start:start + c]
+                start += c
+        return out
+
+    def run_batch(self, batch: np.ndarray) -> BatchReport:
+        t0 = time.perf_counter()
+        g = self.graph
+        busy = np.zeros(self.fleet.n_devices)
+        outputs: dict[int, np.ndarray] = {}
+        rows_out: dict[str, int] = {}
+        for i in g.meta.topo_order:
+            op = g.ops[i]
+            if not g.meta.predecessors(i):
+                rows = batch
+            else:
+                parts = [outputs[p] for p in g.meta.predecessors(i)]
+                rows = np.concatenate(parts, axis=0) if len(parts) > 1 \
+                    else parts[0]
+            shards = self._split_rows(rows, self.x[i])
+            processed = []
+            for u, shard in shards.items():
+                t1 = time.perf_counter()
+                processed.append(op.fn(shard))
+                dt = (time.perf_counter() - t1) / self.device_speed[u]
+                busy[u] += dt
+            out = (np.concatenate(processed, axis=0) if processed
+                   else rows[:0])
+            outputs[i] = out
+            if not g.meta.successors(i):
+                rows_out[op.name] = len(out)
+        self.observed_busy = 0.8 * self.observed_busy + 0.2 * busy
+        elat = edge_latencies(g.meta, self.fleet, self.x, self.cfg)
+        lat = latency(g.meta, self.fleet, self.x, self.cfg)
+        return BatchReport(lat, elat, busy, len(batch), rows_out,
+                           time.perf_counter() - t0)
+
+    # ------------------------------------------------- straggler handling --
+    def degrade_and_replace(self, device: int, factor: float,
+                            beta: float = 0.0):
+        """Straggler mitigation: fold the observed slowdown into the fleet,
+        re-run the placement optimizer, adopt the new x (the paper's
+        heterogeneity terms used as live state)."""
+        if isinstance(self.fleet, RegionFleet):
+            self.fleet = ExplicitFleet(com_cost=self.fleet.com_matrix(),
+                                       speed=self.fleet.speed,
+                                       available=self.fleet.available)
+        self.fleet = self.fleet.degrade_device(device, factor)
+        prob = PlacementProblem(self.graph.meta, self.fleet,
+                                CostConfig(alpha=self.cfg.alpha,
+                                           include_compute=True), beta=beta)
+        res = greedy_transfer(prob, x0=self.x)
+        self.x = res.x
+        self.device_speed[device] /= factor
+        return res
+
+    def remove_device(self, device: int, beta: float = 0.0):
+        """Elastic down-scale after a device loss: rebuild the fleet without
+        it, re-optimize, remap fractions (column deleted, rows renormalized
+        as a warm start)."""
+        if isinstance(self.fleet, RegionFleet):
+            self.fleet = ExplicitFleet(com_cost=self.fleet.com_matrix(),
+                                       speed=self.fleet.speed,
+                                       available=self.fleet.available)
+        fleet2, keep = self.fleet.without_devices([device])
+        x0 = self.x[:, keep]
+        x0 = x0 / np.maximum(x0.sum(axis=1, keepdims=True), 1e-9)
+        prob = PlacementProblem(self.graph.meta, fleet2,
+                                CostConfig(alpha=self.cfg.alpha,
+                                           include_compute=True), beta=beta)
+        res = greedy_transfer(prob, x0=x0)
+        self.fleet = fleet2
+        self.x = res.x
+        self.device_speed = self.device_speed[keep]
+        self.observed_busy = self.observed_busy[keep]
+        return res

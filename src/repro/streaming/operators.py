@@ -1,0 +1,118 @@
+"""Streaming operators: the executable counterpart of the paper's ``V_op``.
+
+A :class:`StreamOperator` couples the cost-model metadata (selectivity,
+work, DQ eligibility) with an actual batch function, so the same DAG object
+is both *optimized* (repro.core) and *executed* (repro.streaming.engine).
+Model inference is just another operator — an LM decode step wrapped with
+its batch semantics — which is how the paper's "massively parallel complex
+streaming analytics" meets the model zoo.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core.graph import Operator, OpGraph
+
+__all__ = ["StreamOperator", "StreamGraph", "source", "map_op", "filter_op",
+           "window_agg", "quality_op", "model_op"]
+
+
+@dataclasses.dataclass
+class StreamOperator:
+    name: str
+    fn: Callable[[np.ndarray], np.ndarray]  # rows → rows
+    selectivity: float = 1.0
+    out_bytes: float = 8.0
+    work: float = 1.0
+    dq_eligible: bool = False
+
+    def to_meta(self) -> Operator:
+        return Operator(self.name, self.selectivity, self.out_bytes,
+                        self.work, self.dq_eligible)
+
+
+class StreamGraph:
+    """Executable operator DAG + its cost-model shadow."""
+
+    def __init__(self, operators: list[StreamOperator],
+                 edges: list[tuple[int, int]]):
+        self.ops = operators
+        self.meta = OpGraph([o.to_meta() for o in operators], edges)
+
+    @property
+    def edges(self):
+        return self.meta.edges
+
+
+# -------------------------------------------------------- constructors -----
+
+def source(name: str = "source") -> StreamOperator:
+    return StreamOperator(name, fn=lambda x: x, selectivity=1.0, work=0.0)
+
+
+def map_op(name: str, fn, out_bytes: float = 8.0,
+           work: float = 1.0) -> StreamOperator:
+    return StreamOperator(name, fn=fn, selectivity=1.0, out_bytes=out_bytes,
+                          work=work)
+
+
+def filter_op(name: str, predicate, selectivity: float,
+              work: float = 0.5) -> StreamOperator:
+    def fn(rows):
+        keep = predicate(rows)
+        return rows[keep]
+
+    return StreamOperator(name, fn=fn, selectivity=selectivity, work=work)
+
+
+def window_agg(name: str, window: int, agg=np.mean,
+               work: float = 1.0) -> StreamOperator:
+    def fn(rows):
+        n = (len(rows) // window) * window
+        if n == 0:
+            return rows[:0]
+        return agg(rows[:n].reshape(-1, window, *rows.shape[1:]), axis=1)
+
+    return StreamOperator(name, fn=fn, selectivity=1.0 / window, work=work)
+
+
+def quality_op(name: str = "dq_check", threshold: float = 0.5,
+               work: float = 2.0) -> StreamOperator:
+    """The paper's data-quality operator: scores rows, drops low quality."""
+    from repro.streaming.quality import quality_scores
+
+    def fn(rows):
+        r = rows if rows.ndim == 2 else rows[:, None]
+        scores = quality_scores(r.astype(np.int64), missing_sentinel=-1)
+        return rows[scores >= threshold]
+
+    return StreamOperator(name, fn=fn, selectivity=0.95, work=work,
+                          dq_eligible=True)
+
+
+def model_op(name: str, model, params, cfg, work: float = 50.0,
+             out_bytes: float = 4.0) -> StreamOperator:
+    """LM scoring as a streaming operator: rows are (S,) token windows;
+    output is one perplexity score per row."""
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def score(tokens):
+        logits, _ = model.forward(params, {"tokens": tokens})
+        from repro.models.layers import cross_entropy_loss
+        lp = jax.vmap(lambda lg, lb: cross_entropy_loss(lg[None, :-1],
+                                                        lb[None, 1:]))(
+            logits, tokens)
+        return lp
+
+    def fn(rows):
+        toks = jnp.asarray(np.clip(rows.astype(np.int32), 0, cfg.vocab - 1))
+        return np.asarray(score(toks))[:, None]
+
+    return StreamOperator(name, fn=fn, selectivity=1.0, work=work,
+                          out_bytes=out_bytes)

@@ -1,0 +1,74 @@
+"""Gradient compression for the slow (inter-pod / DCI) tier.
+
+int8 block quantization with error feedback: each step transmits
+quantize(g + e) and keeps e ← (g + e) − dequant(quantize(g + e)) locally.
+Error feedback makes the scheme unbiased over time — tests assert a toy
+optimization converges to the uncompressed trajectory's loss.
+
+Two entry points:
+  * ``compress_decompress`` — the pure function (what goes on the wire);
+  * ``compressed_psum`` — shard_map collective: quantize → all_gather int8
+    over the named axis → dequantize → sum.  4× less DCI traffic than a
+    bf16 all-reduce at equal participant count (2× vs f32 reduce-scatter+AG
+    pipelines), which directly shrinks the cost model's pod-axis term.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optim import dequantize_blockwise, quantize_blockwise
+
+__all__ = ["compress_decompress", "compressed_psum", "ErrorFeedbackState",
+           "ef_compress_step"]
+
+
+def compress_decompress(g: jnp.ndarray) -> jnp.ndarray:
+    """What the receiver reconstructs from one compressed gradient."""
+    return dequantize_blockwise(quantize_blockwise(g), g.shape)
+
+
+def ef_compress_step(g: jnp.ndarray, err: jnp.ndarray):
+    """Error-feedback compression: returns (wire_payload_dequantized,
+    new_err).  The caller averages payloads across workers."""
+    corrected = g + err
+    sent = compress_decompress(corrected)
+    return sent, corrected - sent
+
+
+class ErrorFeedbackState:
+    """Per-leaf error accumulators (a pytree mirroring the grads)."""
+
+    @staticmethod
+    def init(grads):
+        return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    @staticmethod
+    def step(grads, err_state):
+        outs = jax.tree.map(
+            lambda g, e: ef_compress_step(g.astype(jnp.float32), e),
+            grads, err_state)
+        sent = jax.tree.map(lambda o: o[0], outs,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree.map(lambda o: o[1], outs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        return sent, new_err
+
+
+def compressed_psum(g: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """int8-on-the-wire mean over ``axis_name`` (use inside shard_map).
+
+    Quantizes locally, all-gathers the int8 payload + scales, dequantizes
+    and averages — the wire carries ~1/4 the bytes of f32."""
+    qd = quantize_blockwise(g)
+    qs = jax.lax.all_gather(qd["q"], axis_name)  # (W, blocks, 128) int8
+    ss = jax.lax.all_gather(qd["scale"], axis_name)
+    n = qs.shape[0]
+    total = jnp.zeros(g.shape, jnp.float32)
+    for w in range(n):  # unrolled: W is small (pods)
+        total = total + dequantize_blockwise({"q": qs[w], "scale": ss[w]},
+                                             g.shape)
+    return total / n

@@ -1,0 +1,64 @@
+"""Calibration layer: HLO → cost-model inputs, and the LM stage graph."""
+
+import numpy as np
+import pytest
+
+from repro.core.calibration import calibrate_from_hlo, stage_graph_for_lm
+from repro.core.costmodel import latency
+from repro.core.devices import fleet_from_tpu_mesh
+from repro.core.placement import uniform_placement
+
+
+HLO = """
+HloModule train, is_scheduled=true
+
+ENTRY %main (x: bf16[1024,1024]) -> bf16[1024,1024] {
+  %x = bf16[1024,1024]{1,0} parameter(0)
+  ROOT %ar = bf16[1024,1024]{1,0} all-reduce(%x), channel_id=1, replica_groups=[16,16]<=[256], to_apply=%add
+}
+"""
+
+
+def test_calibrate_from_hlo():
+    cal = calibrate_from_hlo(HLO, flops_per_device=1e12, n_pods=1,
+                             chips_per_pod=256)
+    # 2·B·(n−1)/n ring wire for a 2 MiB bf16 all-reduce over 16
+    expect = 2 * 1024 * 1024 * 2 * 15 / 16
+    assert cal.bytes_per_step == pytest.approx(expect)
+    assert cal.step_comm_seconds() == pytest.approx(expect / 50e9)
+    assert cal.fleet.n_devices == 256
+
+
+def test_fleet_from_tpu_mesh_link_classes():
+    fleet = fleet_from_tpu_mesh(n_pods=2, chips_per_pod=4, ici_gbps=50,
+                                dci_gbps=5, unit_bytes=1e9)
+    com = fleet.com_matrix()
+    # intra-pod pair
+    assert com[0, 1] == pytest.approx(1 / 50)
+    # inter-pod pair is 10× more expensive
+    assert com[0, 5] == pytest.approx(1 / 5)
+    assert com[0, 0] == 0.0
+
+
+def test_stage_graph_latency_orders_geo_vs_local():
+    """The train-step stage graph priced on a geo fleet: splitting a stage
+    across pods costs more than keeping it pod-local — the basic invariant
+    the placement optimizer relies on."""
+    g = stage_graph_for_lm(n_layers=4, d_model=256, d_ff=1024, vocab=1000,
+                           seq=128, batch=8)
+    fleet = fleet_from_tpu_mesh(n_pods=2, chips_per_pod=4)
+    n = g.n_ops
+    local = np.zeros((n, 8))
+    local[:, :4] = 0.25  # everything in pod 0
+    spread = np.full((n, 8), 1 / 8)  # fractions cross the DCI
+    assert latency(g, fleet, local) < latency(g, fleet, spread)
+
+
+def test_stage_graph_structure():
+    g = stage_graph_for_lm(n_layers=3, d_model=64, d_ff=256, vocab=500,
+                           seq=32, batch=4, moe_experts=8, top_k=2)
+    assert g.n_ops == 7  # source, embed, 3 blocks, head, loss
+    # source→embed→blocks→head→loss is a chain
+    assert len(g.edge_paths()) == 1
+    # MoE blocks carry the top-k duplication as selectivity
+    assert g.operators[2].selectivity == 2.0

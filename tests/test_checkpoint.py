@@ -1,0 +1,92 @@
+"""Checkpoint/restart + fault tolerance: atomicity, keep-N GC, and a full
+kill→resume cycle of the trainer driver (simulated node failure)."""
+
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime.checkpoint import (available_steps, latest_step,
+                                      restore_checkpoint, save_checkpoint)
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (8, 16)),
+            "nested": {"b": jnp.arange(4.0), "count": jnp.int32(3)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    s = _state()
+    save_checkpoint(tmp_path, 10, s, extra={"step": 10, "pipeline": {"cursor": 99, "seed": 0}})
+    target = jax.tree.map(jnp.zeros_like, s)
+    restored, extra = restore_checkpoint(tmp_path, 10, target)
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert extra["pipeline"]["cursor"] == 99
+
+
+def test_keep_n_gc(tmp_path):
+    s = _state()
+    for step in (1, 2, 3, 4, 5):
+        save_checkpoint(tmp_path, step, s, keep=2)
+    assert available_steps(tmp_path) == [4, 5]
+    assert latest_step(tmp_path) == 5
+
+
+def test_restore_rejects_shape_mismatch(tmp_path):
+    save_checkpoint(tmp_path, 1, {"w": jnp.zeros((4,))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(tmp_path, 1, {"w": jnp.zeros((5,))})
+
+
+def test_tmp_dir_never_published(tmp_path):
+    """A leftover .tmp dir (crash mid-write) is not listed as a checkpoint."""
+    save_checkpoint(tmp_path, 1, _state())
+    (tmp_path / "step_2.tmp").mkdir()
+    (tmp_path / "step_2.tmp" / "garbage").write_text("x")
+    assert available_steps(tmp_path) == [1]
+
+
+@pytest.mark.slow
+def test_kill_and_resume_trainer(tmp_path):
+    """Full fault-tolerance cycle: trainer dies at step 6 (simulated node
+    failure), restarts with --resume, continues from checkpoint 5 and
+    produces the SAME final params as an uninterrupted run (exact replay:
+    deterministic data cursor + restored optimizer state)."""
+    env = {"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
+           "JAX_PLATFORMS": "cpu", "HOME": "/tmp"}
+    common = [sys.executable, "-m", "repro.launch.train", "--arch",
+              "olmo-1b", "--smoke", "--batch", "2", "--seq", "16",
+              "--ckpt-every", "5", "--lr", "1e-3"]
+    ck_a = tmp_path / "a"
+    r = subprocess.run(common + ["--steps", "10", "--ckpt-dir", str(ck_a),
+                                 "--die-at-step", "6"],
+                       env=env, capture_output=True, text=True)
+    assert r.returncode == 13, r.stderr  # simulated failure
+    assert latest_step(ck_a) == 5
+    r = subprocess.run(common + ["--steps", "10", "--ckpt-dir", str(ck_a),
+                                 "--resume"],
+                       env=env, capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr
+    assert "resumed from step 5" in r.stdout
+    assert latest_step(ck_a) == 10
+
+    ck_b = tmp_path / "b"
+    r = subprocess.run(common + ["--steps", "10", "--ckpt-dir", str(ck_b)],
+                       env=env, capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr
+
+    import numpy as np
+    a = np.load(ck_a / "step_10" / "arrays.npz")
+    b = np.load(ck_b / "step_10" / "arrays.npz")
+    assert set(a.files) == set(b.files)
+    for f in a.files:
+        np.testing.assert_allclose(a[f], b[f], atol=1e-5,
+                                   err_msg=f"leaf {f} diverged after resume")

@@ -1,0 +1,107 @@
+"""Paper-fidelity tests: the §3 worked example, digit for digit.
+
+Tables 3–4 of the paper: 3-op linear DAG (s0=1, s1=1.5), 3 devices, α=0.
+Every number the paper states is asserted here — this is the faithful
+reproduction anchor (DESIGN.md §1)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CostConfig,
+    ExplicitFleet,
+    edge_latency,
+    latency,
+    latency_via_paths,
+    linear_graph,
+    objective_F,
+)
+
+COM = np.array([[0.0, 1.5, 2.0],
+                [1.5, 0.0, 1.0],
+                [2.0, 1.0, 0.0]])
+X_PAPER = np.array([[0.8, 0.2, 0.0],
+                    [0.7, 0.0, 0.3],
+                    [0.3, 0.4, 0.3]])
+X_MODIFIED = np.array([[0.8, 0.2, 0.0],
+                       [0.7, 0.0, 0.3],
+                       [0.0, 0.4, 0.6]])
+
+
+@pytest.fixture
+def setup():
+    return linear_graph([1.0, 1.5, 1.0]), ExplicitFleet(com_cost=COM)
+
+
+def test_edge_0_to_1_is_048(setup):
+    g, fleet = setup
+    # paper: device0 0.48, device1 0.27, device2 0 → max 0.48
+    lat = edge_latency(X_PAPER[0], X_PAPER[1], 1.0, fleet)
+    assert lat == pytest.approx(0.48, abs=1e-12)
+
+
+def test_edge_1_to_2_is_126(setup):
+    g, fleet = setup
+    # paper: max{1.26, 0, 0.45} = 1.26
+    lat = edge_latency(X_PAPER[1], X_PAPER[2], 1.5, fleet)
+    assert lat == pytest.approx(1.26, abs=1e-12)
+
+
+def test_per_device_intermediates(setup):
+    """The paper spells out 0.27 (device 1) and 0.45 (device 2)."""
+    _, fleet = setup
+    per_u_01 = X_PAPER[0] * 1.0 * (COM @ X_PAPER[1])
+    assert per_u_01[1] == pytest.approx(0.27)
+    assert per_u_01[2] == pytest.approx(0.0)
+    per_u_12 = X_PAPER[1] * 1.5 * (COM @ X_PAPER[2])
+    assert per_u_12[2] == pytest.approx(0.45)
+
+
+def test_total_latency_174(setup):
+    g, fleet = setup
+    assert latency(g, fleet, X_PAPER) == pytest.approx(1.74, abs=1e-12)
+    assert latency_via_paths(g, fleet, X_PAPER) == pytest.approx(1.74)
+
+
+def test_F_beta1_dq05_is_116(setup):
+    g, fleet = setup
+    lat = latency(g, fleet, X_PAPER)
+    assert objective_F(lat, 0.5, 1.0) == pytest.approx(1.16, abs=1e-12)
+
+
+def test_modified_plan_latency_237(setup):
+    g, fleet = setup
+    # paper: edge 1→2 becomes max{1.89, 0, 0.18} = 1.89; total 2.37
+    lat12 = edge_latency(X_MODIFIED[1], X_MODIFIED[2], 1.5, fleet)
+    assert lat12 == pytest.approx(1.89, abs=1e-12)
+    assert latency(g, fleet, X_MODIFIED) == pytest.approx(2.37, abs=1e-12)
+
+
+def test_F_flip_with_beta(setup):
+    """β=1: modified plan worse (1.185 > 1.16); β=2: better (0.79 < 0.87)."""
+    g, fleet = setup
+    lat0 = latency(g, fleet, X_PAPER)
+    lat1 = latency(g, fleet, X_MODIFIED)
+    assert objective_F(lat1, 1.0, 1.0) == pytest.approx(1.185, abs=1e-12)
+    assert objective_F(lat1, 1.0, 1.0) > objective_F(lat0, 0.5, 1.0)
+    f0 = objective_F(lat0, 0.5, 2.0)
+    f1 = objective_F(lat1, 1.0, 2.0)
+    assert f0 == pytest.approx(0.87, abs=1e-12)
+    assert f1 == pytest.approx(0.79, abs=1e-12)
+    assert f1 < f0  # the paper's trade-off flip
+
+
+def test_beta_zero_removes_dq(setup):
+    g, fleet = setup
+    lat = latency(g, fleet, X_PAPER)
+    assert objective_F(lat, 1.0, 0.0) == lat
+
+
+def test_alpha_enabled_links(setup):
+    """α>0 adds α·enabledLinks per edge; count for edge 0→1 with the paper
+    placement: nz(x0)={0,1}, nz(x1)={0,2} → 2·2 − |{0}| = 3 links."""
+    g, fleet = setup
+    base = edge_latency(X_PAPER[0], X_PAPER[1], 1.0, fleet)
+    with_alpha = edge_latency(X_PAPER[0], X_PAPER[1], 1.0, fleet,
+                              CostConfig(alpha=0.1))
+    assert with_alpha == pytest.approx(base + 0.1 * 3)

@@ -1,0 +1,161 @@
+"""Hypothesis property tests for the cost model's invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CostConfig,
+    ExplicitFleet,
+    RegionFleet,
+    SmoothConfig,
+    latency,
+    latency_via_paths,
+    make_latency_fn,
+    network_movement,
+    objective_F,
+    random_dag,
+    random_placement,
+)
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+def _instance(draw, max_ops=6, max_dev=5):
+    seed = draw(st.integers(0, 2**31 - 1))
+    n_ops = draw(st.integers(2, max_ops))
+    n_dev = draw(st.integers(2, max_dev))
+    rng = np.random.default_rng(seed)
+    g = random_dag(n_ops, edge_prob=0.5, rng=rng)
+    com = rng.uniform(0.1, 3.0, (n_dev, n_dev))
+    com = (com + com.T) / 2
+    np.fill_diagonal(com, 0.0)
+    fleet = ExplicitFleet(com_cost=com)
+    x = random_placement(n_ops, np.ones((n_ops, n_dev), bool), rng)
+    return g, fleet, x, rng
+
+
+@st.composite
+def instances(draw):
+    return _instance(draw)
+
+
+@given(instances())
+@settings(**SETTINGS)
+def test_dp_equals_path_enumeration(inst):
+    """The O(V+E) topological DP == the paper's explicit max over paths."""
+    g, fleet, x, _ = inst
+    assert latency(g, fleet, x) == pytest.approx(
+        latency_via_paths(g, fleet, x), rel=1e-12)
+
+
+@given(instances())
+@settings(**SETTINGS)
+def test_latency_nonnegative_and_finite(inst):
+    g, fleet, x, _ = inst
+    lat = latency(g, fleet, x)
+    assert np.isfinite(lat) and lat >= 0.0
+
+
+@given(instances())
+@settings(**SETTINGS)
+def test_monotone_in_com_cost(inst):
+    """Uniformly slower links can never reduce latency."""
+    g, fleet, x, _ = inst
+    lat0 = latency(g, fleet, x)
+    slower = ExplicitFleet(com_cost=fleet.com_cost * 2.0)
+    assert latency(g, slower, x) >= lat0 - 1e-12
+
+
+@given(instances())
+@settings(**SETTINGS)
+def test_scale_invariance(inst):
+    """latency(c·comCost) == c·latency(comCost) (α=0): the model is linear
+    in link costs."""
+    g, fleet, x, _ = inst
+    lat0 = latency(g, fleet, x)
+    scaled = ExplicitFleet(com_cost=fleet.com_cost * 3.5)
+    assert latency(g, scaled, x) == pytest.approx(3.5 * lat0, rel=1e-9)
+
+
+@given(instances())
+@settings(**SETTINGS)
+def test_colocated_placement_has_zero_latency(inst):
+    """Everything on one device (diagonal comCost = 0) ⇒ zero comm latency
+    (the paper's model charges only network transfers)."""
+    g, fleet, x, _ = inst
+    n_dev = fleet.n_devices
+    x1 = np.zeros_like(x)
+    x1[:, 0] = 1.0
+    assert latency(g, fleet, x1) == pytest.approx(0.0, abs=1e-12)
+
+
+@given(instances())
+@settings(**SETTINGS)
+def test_alpha_monotone(inst):
+    g, fleet, x, _ = inst
+    lat0 = latency(g, fleet, x, CostConfig(alpha=0.0))
+    lat1 = latency(g, fleet, x, CostConfig(alpha=0.5))
+    assert lat1 >= lat0 - 1e-12
+
+
+@given(instances())
+@settings(**SETTINGS)
+def test_F_monotone_in_dq_and_beta(inst):
+    g, fleet, x, _ = inst
+    lat = latency(g, fleet, x)
+    for beta in (0.5, 1.0, 2.0):
+        f_low = objective_F(lat, 0.2, beta)
+        f_high = objective_F(lat, 0.8, beta)
+        assert f_high <= f_low + 1e-12  # more DQ can only help F at fixed lat
+
+
+@given(instances())
+@settings(**SETTINGS)
+def test_jax_twin_matches_numpy(inst):
+    """Hard-max JAX model == f64 numpy oracle (to f32 precision)."""
+    import jax.numpy as jnp
+
+    g, fleet, x, _ = inst
+    lat_np = latency(g, fleet, x)
+    lat_fn = make_latency_fn(g, fleet)
+    lat_jx = float(lat_fn(jnp.asarray(x)))
+    assert lat_jx == pytest.approx(lat_np, rel=2e-5, abs=1e-6)
+
+
+@given(instances())
+@settings(**SETTINGS)
+def test_smooth_upper_bounds_hard(inst):
+    """logsumexp smoothing always upper-bounds the hard max."""
+    import jax.numpy as jnp
+
+    g, fleet, x, _ = inst
+    hard = latency(g, fleet, x)
+    smooth = float(make_latency_fn(g, fleet, SmoothConfig(temp=0.05))(
+        jnp.asarray(x)))
+    assert smooth >= hard - 1e-5
+
+
+@given(instances())
+@settings(**SETTINGS)
+def test_region_fleet_matches_explicit(inst):
+    """A RegionFleet and the ExplicitFleet of its materialized com matrix
+    produce identical latencies."""
+    g, _, x, rng = inst
+    n_dev = x.shape[1]
+    n_regions = rng.integers(1, n_dev + 1)
+    region = rng.integers(0, n_regions, n_dev)
+    inter = rng.uniform(0.1, 2.0, (n_regions, n_regions))
+    inter = (inter + inter.T) / 2
+    rf = RegionFleet(region=region, inter=inter, self_cost=0.0)
+    ef = ExplicitFleet(com_cost=rf.com_matrix())
+    assert latency(g, rf, x) == pytest.approx(latency(g, ef, x), rel=1e-12)
+
+
+@given(instances())
+@settings(**SETTINGS)
+def test_network_movement_zero_when_colocated(inst):
+    g, fleet, x, _ = inst
+    x1 = np.zeros_like(x)
+    x1[:, -1] = 1.0
+    assert network_movement(g, fleet, x1) == pytest.approx(0.0, abs=1e-12)

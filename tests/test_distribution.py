@@ -1,0 +1,145 @@
+"""Distribution-layer tests on 8 fake host devices (subprocess: device count
+locks at jax init, so these run in children with their own XLA_FLAGS)."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+ENV = {"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/tmp",
+       "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+       "JAX_PLATFORMS": "cpu"}
+
+
+def _run(code: str):
+    r = subprocess.run([sys.executable, "-c", code], env=ENV,
+                       capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, r.stderr + r.stdout
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_sharded_train_step_runs_and_matches_single_device():
+    """A REAL sharded train step on a 2×4 mesh produces the same loss as the
+    unsharded single-device run (GSPMD correctness end-to-end)."""
+    out = _run("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P, AxisType
+from repro.configs import get_smoke_config
+from repro.models.api import build_model
+from repro.launch.shardings import fsdp_specs
+from repro.train.optim import AdamWConfig, adamw_init
+from repro.train.steps import make_train_step
+
+cfg = get_smoke_config("granite_8b").replace(act_dtype="float32")
+model = build_model(cfg)
+params = model.init_params(jax.random.PRNGKey(0))
+opt_cfg = AdamWConfig(lr=1e-3)
+opt = adamw_init(params, opt_cfg)
+rng = np.random.default_rng(0)
+batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (8, 32), dtype=np.int32)),
+         "labels": jnp.asarray(rng.integers(0, cfg.vocab, (8, 32), dtype=np.int32))}
+step = make_train_step(model, cfg, opt_cfg)
+
+# single-device reference
+_, _, m0 = jax.jit(step)(params, opt, batch)
+loss0 = float(m0["loss"])
+
+mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+with jax.set_mesh(mesh):
+    pspecs = fsdp_specs(model.param_specs(), jax.eval_shape(model.init_params, jax.random.PRNGKey(0)), mesh)
+    j = jax.jit(step, in_shardings=(pspecs, None, P("data")))
+    sp = jax.device_put(params, jax.tree.map(lambda s: jax.sharding.NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P)))
+    batch_sh = jax.device_put(batch, jax.sharding.NamedSharding(mesh, P("data")))
+    p2, o2, m1 = j(sp, opt, batch_sh)
+    loss1 = float(m1["loss"])
+print("LOSSES", loss0, loss1)
+assert abs(loss0 - loss1) < 1e-3, (loss0, loss1)
+""")
+    assert "LOSSES" in out
+
+
+@pytest.mark.slow
+def test_mesh_and_dryrun_cell_on_8_devices():
+    """make_production_mesh shape contract + a miniature dry-run cell
+    (reduced config, 2×4 mesh) lowers, compiles and reports collectives."""
+    out = _run("""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, AxisType
+from repro.configs import get_smoke_config
+from repro.models.api import build_model
+from repro.launch.shardings import fsdp_specs, input_specs
+from repro.perf.hlo import analyze_module
+from repro.train.optim import AdamWConfig, adamw_init, opt_state_specs
+from repro.train.steps import make_train_step
+import dataclasses
+
+cfg = get_smoke_config("qwen3_32b")
+mesh = jax.make_mesh((2,4), ("data","model"), axis_types=(AxisType.Auto,)*2)
+model = build_model(cfg)
+with jax.set_mesh(mesh):
+    params_sds = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    pspecs = fsdp_specs(model.param_specs(), params_sds, mesh)
+    opt_cfg = AdamWConfig()
+    opt_sds = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params_sds)
+    ospecs = opt_state_specs(pspecs, opt_cfg)
+    step = make_train_step(model, cfg, opt_cfg)
+    def ws(t, s):
+        return jax.tree.map(lambda a, sp: jax.ShapeDtypeStruct(a.shape, a.dtype,
+            sharding=jax.sharding.NamedSharding(mesh, sp)), t, s,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    batch = {k: jax.ShapeDtypeStruct((8, 32), jnp.int32,
+             sharding=jax.sharding.NamedSharding(mesh, P("data")))
+             for k in ("tokens", "labels")}
+    j = jax.jit(step, in_shardings=(pspecs, ospecs, P("data")),
+                out_shardings=(pspecs, ospecs, None), donate_argnums=(0,1))
+    comp = j.lower(ws(params_sds, pspecs), ws(opt_sds, ospecs), batch).compile()
+    stats = analyze_module(comp.as_text())
+    mem = comp.memory_analysis()
+    print("FLOPS", stats.flops, "COLL", stats.collectives.total_count,
+          "TEMP", mem.temp_size_in_bytes)
+    assert stats.flops > 0
+    assert stats.collectives.total_count > 0  # TP/DP collectives present
+""")
+    assert "FLOPS" in out
+
+
+def test_production_mesh_shapes():
+    """Mesh contract only (needs 256/512 devices → subprocess)."""
+    out = _run("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax
+from repro.launch.mesh import make_production_mesh, mesh_chips, data_axes
+m1 = make_production_mesh()
+assert dict(m1.shape) == {"data": 16, "model": 16}
+assert mesh_chips(m1) == 256
+m2 = make_production_mesh(multi_pod=True)
+assert dict(m2.shape) == {"pod": 2, "data": 16, "model": 16}
+assert mesh_chips(m2) == 512
+assert data_axes(m2) == ("pod", "data")
+print("MESH OK")
+""")
+    assert "MESH OK" in out
+
+
+def test_autoshard_prefers_tp_for_big_models():
+    from repro.core.autoshard import choose_layout, estimate_layout, Layout
+    best = choose_layout(
+        chips=256, pods=1, n_layers=62, d_model=7168, d_ff=19200,
+        vocab=32256, seq=4096, global_batch=256, n_params=33e9)
+    assert best.layout.tp >= 2  # pure DP can't be optimal at 33B
+    # multi-pod: DCI pricing pushes the estimate up
+    single = estimate_layout(
+        Layout(dp=16, tp=16), n_layers=62, d_model=7168, d_ff=19200,
+        vocab=32256, seq=4096, global_batch=256, n_params=33e9)
+    multi = estimate_layout(
+        Layout(dp=32, tp=16, pods=2), n_layers=62, d_model=7168, d_ff=19200,
+        vocab=32256, seq=4096, global_batch=512, n_params=33e9)
+    assert multi.dci_collective_s > 0.0
+    assert single.dci_collective_s == 0.0

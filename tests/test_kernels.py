@@ -1,0 +1,108 @@
+"""Pallas kernel sweeps: shapes × dtypes, interpret=True vs the pure-jnp
+oracles in kernels/ref.py (assignment requirement), plus hypothesis sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 3e-2}
+
+
+@pytest.mark.parametrize("B,S,H,D", [
+    (1, 128, 1, 64), (2, 128, 4, 64), (1, 256, 2, 128),
+    (2, 96, 3, 32), (1, 384, 2, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(B, S, H, D, dtype, causal):
+    ks = jax.random.split(jax.random.PRNGKey(B * S + H), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, H, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, H, D), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32),
+        atol=ATOL[dtype], rtol=1e-2)
+
+
+@pytest.mark.parametrize("bq,bk", [(64, 64), (128, 64), (32, 128)])
+def test_flash_attention_block_shape_invariance(bq, bk):
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (2, 256, 2, 64))
+    k = jax.random.normal(ks[1], (2, 256, 2, 64))
+    v = jax.random.normal(ks[2], (2, 256, 2, 64))
+    out = ops.flash_attention(q, k, v, causal=True, interpret=True,
+                              bq=bq, bk=bk)
+    exp = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5)
+
+
+@pytest.mark.parametrize("b,L,H,P,N", [
+    (2, 64, 8, 16, 16), (1, 128, 4, 32, 8), (2, 32, 2, 8, 4),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_sweep(b, L, H, P, N, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(L + H), 6)
+    x = jax.random.normal(ks[0], (b, L, H, P), dtype)
+    B = (jax.random.normal(ks[1], (b, L, N)) * 0.5).astype(dtype)
+    C = (jax.random.normal(ks[2], (b, L, N)) * 0.5).astype(dtype)
+    dt = (jax.nn.softplus(jax.random.normal(ks[3], (b, L, H))) * 0.5)
+    A = -jnp.exp(jax.random.normal(ks[4], (H,)) * 0.3)
+    D = jax.random.normal(ks[5], (H,))
+    y = ops.ssd_scan(x, B, C, dt, A, D, chunk=16, head_block=2,
+                     interpret=True)
+    y_exp, _ = ref.ssd_ref(x, B, C, dt, A, D)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_exp, np.float32),
+                               atol=5e-2 if dtype == jnp.bfloat16 else 2e-3,
+                               rtol=5e-2)
+
+
+def test_ssd_scan_chunk_invariance():
+    ks = jax.random.split(jax.random.PRNGKey(3), 6)
+    b, L, H, P, N = 1, 96, 4, 16, 8
+    x = jax.random.normal(ks[0], (b, L, H, P))
+    B = jax.random.normal(ks[1], (b, L, N)) * 0.5
+    C = jax.random.normal(ks[2], (b, L, N)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (b, L, H))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[4], (H,)) * 0.3)
+    D = jax.random.normal(ks[5], (H,))
+    outs = [np.asarray(ops.ssd_scan(x, B, C, dt, A, D, chunk=c,
+                                    head_block=hb, interpret=True))
+            for c, hb in ((16, 4), (32, 2), (96, 1))]
+    np.testing.assert_allclose(outs[0], outs[1], atol=1e-4)
+    np.testing.assert_allclose(outs[0], outs[2], atol=1e-4)
+
+
+@given(rows=st.integers(1, 300), d=st.sampled_from([64, 128, 256]),
+       seed=st.integers(0, 2**30))
+@settings(max_examples=15, deadline=None)
+def test_rmsnorm_property(rows, d, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (rows, d))
+    w = jax.random.normal(k2, (d,))
+    out = ops.rmsnorm(x, w, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.rmsnorm_ref(x, w)), atol=1e-5)
+
+
+@given(st.integers(0, 2**30))
+@settings(max_examples=10, deadline=None)
+def test_flash_attention_property_random_shapes(seed):
+    rng = np.random.default_rng(seed)
+    B = int(rng.integers(1, 3))
+    S = int(rng.choice([64, 128, 192, 256]))
+    H = int(rng.integers(1, 4))
+    D = int(rng.choice([32, 64]))
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    out = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=3e-5)

@@ -1,0 +1,134 @@
+"""Per-arch smoke tests: REDUCED same-family configs, one forward + one
+train step on CPU, asserting output shapes and no NaNs (assignment
+requirement).  Full configs are exercised only by the dry-run."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config, SHAPES
+from repro.models.api import analytic_flops, build_model, count_params
+from repro.train.optim import AdamWConfig, adamw_init
+from repro.train.steps import make_train_step
+
+
+def _batch_for(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S), dtype=np.int32)),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S), dtype=np.int32)),
+    }
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(1), (B, cfg.n_image_tokens, cfg.d_model))
+    if cfg.family == "audio":
+        batch["audio_frames"] = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.n_audio_frames, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    batch = _batch_for(cfg, B, S)
+
+    logits, aux = jax.jit(model.forward)(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_padded)
+    assert not bool(jnp.isnan(logits).any())
+    assert np.isfinite(float(aux))
+
+    opt_cfg = AdamWConfig(lr=1e-3, bits8=False)
+    opt_state = adamw_init(params, opt_cfg)
+    step = jax.jit(make_train_step(model, cfg, opt_cfg))
+    params2, opt_state2, metrics = step(params, opt_state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and loss > 0.0
+    # params actually changed (skip zero-size placeholder leaves)
+    deltas = jax.tree.map(
+        lambda a, b: float(jnp.abs(a - b).max()) if a.size else 0.0,
+        params, params2)
+    assert max(jax.tree.leaves(deltas)) > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_path(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    B, S = 2, 8
+    batch = _batch_for(cfg, B, S)
+    batch.pop("labels")
+    cache = model.init_cache(B, S + 4)
+    last, cache = jax.jit(model.prefill)(params, batch, cache)
+    assert last.shape == (B, 1, cfg.vocab_padded)
+    tok = jnp.argmax(last[:, 0, :cfg.vocab], -1).astype(jnp.int32)[:, None]
+    lg, cache = jax.jit(model.decode_step)(params, cache, jnp.int32(S), tok)
+    assert lg.shape == (B, 1, cfg.vocab_padded)
+    assert not bool(jnp.isnan(lg).any())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_analytics(arch):
+    """Full configs: param counts are in the published ballpark and the
+    analytic flops are positive for every runnable shape."""
+    cfg = get_config(arch)
+    total, active = count_params(cfg)
+    expected = {
+        "olmo_1b": 1.3e9, "granite_8b": 8.2e9, "deepseek_coder_33b": 33e9,
+        "qwen3_32b": 33e9, "mamba2_1_3b": 1.4e9, "arctic_480b": 477e9,
+        "grok_1_314b": 316e9, "zamba2_1_2b": 1.2e9,
+        "llama_3_2_vision_11b": 10e9, "whisper_large_v3": 1.6e9,
+    }[arch]
+    assert total == pytest.approx(expected, rel=0.12)
+    assert active > 0
+    if cfg.family != "hybrid":
+        # hybrid (zamba2) REUSES its shared attention block ~7×, so
+        # compute-active params legitimately exceed stored params
+        assert active <= total
+    for shape in SHAPES.values():
+        f = analytic_flops(cfg, shape.seq_len, shape.global_batch, shape.kind)
+        assert f > 0
+
+
+def test_mamba_chunk_invariance():
+    cfg = get_smoke_config("mamba2_1_3b").replace(act_dtype="float32")
+    toks = jnp.arange(2 * 24, dtype=jnp.int32).reshape(2, 24) % cfg.vocab
+    outs = []
+    for chunk in (4, 8, 24):
+        m = build_model(cfg.replace(ssm_chunk=chunk))
+        p = m.init_params(jax.random.PRNGKey(0))
+        lg, _ = jax.jit(m.forward)(p, {"tokens": toks})
+        outs.append(np.asarray(lg))
+    np.testing.assert_allclose(outs[0], outs[1], atol=2e-4)
+    np.testing.assert_allclose(outs[0], outs[2], atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ["granite_8b", "zamba2_1_2b",
+                                  "llama_3_2_vision_11b", "whisper_large_v3"])
+def test_decode_matches_forward(arch):
+    """Greedy decode step == forward on the extended sequence (exactness of
+    KV caches / SSM state across all cache layouts)."""
+    cfg = get_smoke_config(arch).replace(act_dtype="float32")
+    if cfg.moe_experts:
+        cfg = cfg.replace(moe_capacity_factor=8.0)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    batch = _batch_for(cfg, B, S)
+    batch.pop("labels")
+    cache = model.init_cache(B, S + 2)
+    last, cache = jax.jit(model.prefill)(params, batch, cache)
+    lg_full, _ = jax.jit(model.forward)(params, batch)
+    np.testing.assert_allclose(np.asarray(last[:, 0]),
+                               np.asarray(lg_full[:, -1]), atol=1e-4)
+    tok = jnp.argmax(last[:, 0, :cfg.vocab], -1).astype(jnp.int32)[:, None]
+    lg, _ = jax.jit(model.decode_step)(params, cache, jnp.int32(S), tok)
+    b2 = dict(batch)
+    b2["tokens"] = jnp.concatenate([batch["tokens"], tok], axis=1)
+    full2, _ = jax.jit(model.forward)(params, b2)
+    np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                               np.asarray(full2[:, -1]), atol=5e-3)

@@ -1,0 +1,114 @@
+"""Placement-optimizer tests: all heuristics vs the exhaustive oracle on
+tiny instances; feasibility; DQ co-optimization."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CostConfig,
+    DQCoupling,
+    ExplicitFleet,
+    PlacementProblem,
+    exhaustive_search,
+    greedy_transfer,
+    linear_graph,
+    diamond_graph,
+    projected_gradient,
+    random_search,
+    simulated_annealing,
+    uniform_placement,
+    validate_placement,
+)
+
+COM = np.array([[0.0, 1.5, 2.0],
+                [1.5, 0.0, 1.0],
+                [2.0, 1.0, 0.0]])
+
+
+@pytest.fixture
+def paper_problem():
+    g = linear_graph([1.0, 1.5, 1.0])
+    fleet = ExplicitFleet(com_cost=COM)
+    # capacity 1.2 per device forces genuine spreading (otherwise the
+    # trivial optimum is everything colocated at latency 0)
+    dq = DQCoupling(cap0=np.full(3, 1.2), load=np.full(3, 0.2))
+    return PlacementProblem(g, fleet, beta=1.0, dq=dq)
+
+
+def test_all_optimizers_beat_uniform(paper_problem):
+    prob = paper_problem
+    avail = prob.availability()
+    base = prob.score(
+        np.full((3, 3), 1 / 3), 0.0)
+    rng = np.random.default_rng(0)
+    results = {
+        "greedy": greedy_transfer(prob),
+        "sa": simulated_annealing(prob, rng, steps=2500),
+        "pg": projected_gradient(prob, steps=120),
+        "rs": random_search(prob, rng, n_candidates=512),
+    }
+    for name, res in results.items():
+        validate_placement(res.x, avail)
+        assert prob.feasible(res.x, res.dq_fraction), name
+        assert res.F <= base + 1e-9, f"{name}: {res.F} vs uniform {base}"
+
+
+def test_heuristics_near_exhaustive(paper_problem):
+    """Continuous heuristics should match or beat the granularity-4 grid
+    oracle (they search a superset of the grid)."""
+    prob = paper_problem
+    oracle = exhaustive_search(prob, granularity=4)
+    greedy = greedy_transfer(prob)
+    pg = projected_gradient(prob, steps=150)
+    assert min(greedy.F, pg.F) <= oracle.F * 1.10 + 1e-9
+
+
+def test_exhaustive_is_grid_optimal():
+    """On a 2-op/2-dev instance, brute force over a fine grid by hand."""
+    g = linear_graph([1.0, 1.0])
+    fleet = ExplicitFleet(com_cost=np.array([[0.0, 1.0], [1.0, 0.0]]))
+    prob = PlacementProblem(g, fleet)
+    res = exhaustive_search(prob, granularity=8)
+    # colocation is optimal: latency 0
+    assert res.F == pytest.approx(0.0, abs=1e-12)
+
+
+def test_dq_pinned_to_one_when_free():
+    """With no capacity coupling and β>0, more DQ strictly improves F, so
+    every optimizer should end at dq=1 (paper eq. 8 logic)."""
+    g = linear_graph([1.0, 1.5, 1.0])
+    fleet = ExplicitFleet(com_cost=COM, available=np.array(
+        [[1, 1, 0], [0, 1, 1], [1, 0, 1]], dtype=bool))
+    prob = PlacementProblem(g, fleet, beta=2.0)
+    res = greedy_transfer(prob)
+    assert res.dq_fraction == pytest.approx(1.0)
+
+
+def test_availability_respected():
+    g = diamond_graph()
+    avail = np.array([[1, 0, 0],
+                      [0, 1, 1],
+                      [1, 1, 0],
+                      [0, 0, 1]], dtype=bool)
+    fleet = ExplicitFleet(com_cost=COM, available=avail)
+    prob = PlacementProblem(g, fleet)
+    for res in (greedy_transfer(prob),
+                simulated_annealing(prob, np.random.default_rng(1), steps=800),
+                projected_gradient(prob, steps=80)):
+        validate_placement(res.x, avail)
+
+
+def test_degrade_device_shifts_mass():
+    """Straggler mitigation: after degrading device 0 by 8×, re-optimizing
+    moves mass off it."""
+    g = linear_graph([1.0, 1.0, 1.0])
+    fleet = ExplicitFleet(com_cost=COM)
+    dq = DQCoupling(cap0=np.full(3, 1.2), load=np.zeros(3))
+    prob = PlacementProblem(g, fleet, dq=dq)
+    res0 = greedy_transfer(prob)
+    mass0 = res0.x[:, 0].sum()
+    degraded = fleet.degrade_device(0, 8.0)
+    prob2 = PlacementProblem(g, degraded, dq=dq)
+    res1 = greedy_transfer(prob2, x0=res0.x)
+    assert res1.x[:, 0].sum() <= mass0 + 1e-9
+    assert res1.F <= prob2.score(res0.x, res0.dq_fraction) + 1e-9

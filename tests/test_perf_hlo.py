@@ -1,0 +1,83 @@
+"""HLO analyzer: trip-count weighting, dot flops, collective accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.perf.hlo import analyze_module, parse_collectives
+from repro.perf.roofline import compute_terms
+
+
+def test_scan_flops_equal_unrolled():
+    def scanned(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y.sum()
+
+    def unrolled(x, w):
+        for i in range(8):
+            x = jnp.tanh(x @ w[i])
+        return x.sum()
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
+    fs = analyze_module(jax.jit(scanned).lower(x, w).compile().as_text())
+    fu = analyze_module(jax.jit(unrolled).lower(x, w).compile().as_text())
+    assert fs.flops == pytest.approx(fu.flops, rel=1e-6)
+    assert fs.flops == pytest.approx(8 * 2 * 128 ** 3, rel=0.01)
+
+
+def test_dot_flops_with_batch_dims():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b).sum()
+
+    a = jax.ShapeDtypeStruct((4, 32, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 64, 16), jnp.float32)
+    s = analyze_module(jax.jit(f).lower(a, b).compile().as_text())
+    assert s.flops == pytest.approx(2 * 4 * 32 * 64 * 16, rel=0.02)
+
+
+def test_nested_scan_multiplies():
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, wi):
+                return ci @ wi, None
+            y, _ = jax.lax.scan(inner, c, w)
+            return y, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y.sum()
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((3, 64, 64), jnp.float32)
+    s = analyze_module(jax.jit(f).lower(x, w).compile().as_text())
+    assert s.flops == pytest.approx(5 * 3 * 2 * 64 ** 3, rel=0.02)
+
+
+def test_collective_wire_model():
+    from repro.perf.hlo import CollectiveStats
+    hlo = """
+HloModule test, is_scheduled=true
+
+ENTRY %main (x: f32[1024]) -> f32[1024] {
+  %x = f32[1024]{0} parameter(0)
+  ROOT %ar = f32[1024]{0} all-reduce(%x), channel_id=1, replica_groups={{0,1,2,3}}, to_apply=%add
+}
+"""
+    stats = parse_collectives(hlo)
+    assert stats.counts["all-reduce"] == 1
+    # ring: 2·B·(n−1)/n = 2·4096·0.75
+    assert stats.wire_bytes["all-reduce"] == pytest.approx(2 * 4096 * 0.75)
+
+
+def test_roofline_terms_and_dominance():
+    t = compute_terms(hlo_flops=197e12, hlo_bytes=819e9, wire_bytes=0.0,
+                      chips=4, model_flops=4 * 197e12 * 0.5, per_device=True)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(1.0)
+    assert t.dominant in ("compute", "memory")
+    assert t.useful_flops_fraction == pytest.approx(0.5)
+    t2 = compute_terms(1e12, 1e9, 500e9, chips=4, model_flops=1e12)
+    assert t2.dominant == "collective"
+    assert t2.collective_s == pytest.approx(10.0)

@@ -1,0 +1,109 @@
+"""Streaming engine end-to-end: DAG execution under fractional placements,
+selectivity accounting, straggler mitigation, elastic device loss."""
+
+import numpy as np
+import pytest
+
+from repro.core import ExplicitFleet, uniform_placement
+from repro.streaming.engine import StreamingEngine
+from repro.streaming.operators import (StreamGraph, filter_op, map_op,
+                                       quality_op, source, window_agg)
+
+COM = np.array([[0.0, 1.0, 2.0],
+                [1.0, 0.0, 1.5],
+                [2.0, 1.5, 0.0]])
+
+
+def _pipeline():
+    ops = [
+        source(),
+        map_op("normalize", lambda r: (r - r.mean()) / (r.std() + 1e-9),
+               work=1.0),
+        filter_op("threshold", lambda r: r[:, 0] > -0.5, selectivity=0.7),
+        window_agg("window_mean", window=4),
+    ]
+    edges = [(0, 1), (1, 2), (2, 3)]
+    return StreamGraph(ops, edges)
+
+
+def test_engine_runs_and_respects_selectivity():
+    g = _pipeline()
+    fleet = ExplicitFleet(com_cost=COM)
+    x = uniform_placement(g.meta.n_ops, np.ones((g.meta.n_ops, 3), bool))
+    eng = StreamingEngine(g, fleet, x)
+    rng = np.random.default_rng(0)
+    batch = rng.normal(size=(256, 4))
+    rep = eng.run_batch(batch)
+    assert rep.rows_in == 256
+    out = rep.rows_out["window_mean"]
+    # filter keeps ~70% (here: >−0.5 of standard normal ≈ 69%), window /4
+    assert 20 < out < 64
+    assert rep.modeled_latency > 0.0
+    assert rep.edge_latencies.shape == (3,)
+
+
+def test_quality_operator_drops_bad_rows():
+    ops = [source(), quality_op(threshold=0.5)]
+    g = StreamGraph(ops, [(0, 1)])
+    fleet = ExplicitFleet(com_cost=COM)
+    x = uniform_placement(2, np.ones((2, 3), bool))
+    eng = StreamingEngine(g, fleet, x)
+    rng = np.random.default_rng(1)
+    batch = rng.integers(0, 50, (64, 32)).astype(float)
+    batch[:16] = -1  # fully-missing rows → low completeness
+    rep = eng.run_batch(batch)
+    assert rep.rows_out["dq_check"] <= 48
+
+
+def test_straggler_mitigation_reduces_modeled_latency():
+    g = _pipeline()
+    fleet = ExplicitFleet(com_cost=COM)
+    x = uniform_placement(g.meta.n_ops, np.ones((g.meta.n_ops, 3), bool))
+    eng = StreamingEngine(g, fleet, x)
+    # device 2 becomes 10× slower: fold into fleet, re-optimize
+    before = eng.run_batch(np.random.default_rng(2).normal(size=(64, 4)))
+    res = eng.degrade_and_replace(device=2, factor=10.0)
+    # mass on the degraded device shrinks vs uniform
+    assert eng.x[:, 2].sum() <= x[:, 2].sum() + 1e-9
+    # and the re-optimized placement beats keeping the old one on the
+    # degraded fleet
+    from repro.core import CostConfig, latency
+    lat_old = latency(g.meta, eng.fleet, x,
+                      CostConfig(include_compute=True))
+    assert res.F <= lat_old + 1e-9
+
+
+def test_elastic_device_loss():
+    g = _pipeline()
+    fleet = ExplicitFleet(com_cost=COM)
+    n = g.meta.n_ops
+    x = uniform_placement(n, np.ones((n, 3), bool))
+    eng = StreamingEngine(g, fleet, x)
+    eng.remove_device(1)
+    assert eng.fleet.n_devices == 2
+    assert eng.x.shape == (n, 2)
+    np.testing.assert_allclose(eng.x.sum(axis=1), 1.0, atol=1e-6)
+    rep = eng.run_batch(np.random.default_rng(3).normal(size=(64, 4)))
+    assert rep.rows_out["window_mean"] > 0
+
+
+def test_monitor_flags_stragglers():
+    from repro.runtime.stragglers import StragglerMonitor
+    mon = StragglerMonitor(n_devices=4, threshold=1.5)
+    for _ in range(5):
+        mon.observe(np.array([1.0, 1.1, 0.9, 4.0]))
+    flagged = mon.stragglers()
+    assert [u for u, _ in flagged] == [3]
+    assert flagged[0][1] > 3.0
+
+
+def test_rescale_plan():
+    from repro.runtime.elastic import plan_rescale
+    plan = plan_rescale(old_devices=256, surviving=240, model_ways=16,
+                        global_batch=256)
+    assert plan.new_devices == 240
+    assert plan.data_ways == 15
+    assert plan.global_batch == 256  # kept; accumulation handles remainder
+    assert plan.new_devices % plan.model_ways == 0
+    with pytest.raises(ValueError):
+        plan_rescale(256, 10, 16, 256)
