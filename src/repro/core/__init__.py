@@ -4,6 +4,7 @@ and its calibration against compiled TPU artifacts."""
 
 from repro.core.costmodel import (
     CostConfig,
+    edge_latencies,
     edge_latency,
     enabled_links,
     latency,
@@ -13,7 +14,13 @@ from repro.core.costmodel import (
 )
 from repro.core.devices import ExplicitFleet, RegionFleet, fleet_from_tpu_mesh
 from repro.core.graph import Operator, OpGraph, diamond_graph, linear_graph, random_dag
-from repro.core.jaxmodel import SmoothConfig, make_latency_fn, make_objective_fn
+from repro.core.jaxmodel import (
+    SmoothConfig,
+    make_edge_latencies_com_fn,
+    make_latency_com_fn,
+    make_latency_fn,
+    make_objective_fn,
+)
 from repro.core.optimizers import (
     DQCoupling,
     OptResult,
@@ -22,6 +29,7 @@ from repro.core.optimizers import (
     greedy_transfer,
     projected_gradient,
     random_search,
+    scenario_robust_search,
     simulated_annealing,
 )
 from repro.core.placement import (
@@ -31,13 +39,14 @@ from repro.core.placement import (
 )
 
 __all__ = [
-    "CostConfig", "edge_latency", "enabled_links", "latency",
+    "CostConfig", "edge_latencies", "edge_latency", "enabled_links", "latency",
     "latency_via_paths", "network_movement", "objective_F",
     "ExplicitFleet", "RegionFleet", "fleet_from_tpu_mesh",
     "Operator", "OpGraph", "diamond_graph", "linear_graph", "random_dag",
     "SmoothConfig", "make_latency_fn", "make_objective_fn",
+    "make_edge_latencies_com_fn", "make_latency_com_fn",
     "DQCoupling", "OptResult", "PlacementProblem", "exhaustive_search",
     "greedy_transfer", "projected_gradient", "random_search",
-    "simulated_annealing", "random_placement", "uniform_placement",
-    "validate_placement",
+    "scenario_robust_search", "simulated_annealing", "random_placement",
+    "uniform_placement", "validate_placement",
 ]

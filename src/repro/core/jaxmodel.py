@@ -27,7 +27,9 @@ import numpy as np
 from repro.core.devices import ExplicitFleet, RegionFleet
 from repro.core.graph import OpGraph
 
-__all__ = ["SmoothConfig", "make_latency_fn", "make_objective_fn"]
+__all__ = ["SmoothConfig", "make_latency_fn", "make_objective_fn",
+           "make_edge_latencies_com_fn", "make_latency_com_fn",
+           "critical_path_dp"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,6 +119,83 @@ def make_objective_fn(graph: OpGraph, fleet: ExplicitFleet | RegionFleet,
         return lat(x) / (1.0 + beta * dq_fraction)
 
     return obj
+
+
+# -- batched what-if APIs (the com matrix itself is traced) -------------------
+#
+# make_latency_fn closes over ONE fleet; the scenario-simulation subsystem
+# (repro.sim) instead scores placements against *families* of fleets, so the
+# communication matrix must be an argument: vmap over (x, com) pairs scores a
+# (scenario × placement) grid in one dispatch.  Edge math is vectorized over
+# E (gather endpoint rows, one einsum, one row-max) rather than unrolled
+# per-edge — that is what the Pallas kernel in kernels/edge_latency.py fuses.
+
+def _edge_arrays(graph: OpGraph):
+    src = np.array([i for i, _ in graph.edges], dtype=np.int64)
+    dst = np.array([j for _, j in graph.edges], dtype=np.int64)
+    sel = np.array([graph.operators[i].selectivity for i, _ in graph.edges])
+    return src, dst, sel
+
+
+def make_edge_latencies_com_fn(graph: OpGraph, cfg: SmoothConfig = SmoothConfig(),
+                               nz_eps: float = 0.0):
+    """Returns ``elat(x, com) -> (E,)`` with both placement AND com traced.
+
+    Hard-max only (this is the what-if scorer, not the gradient path);
+    matches :func:`repro.core.costmodel.edge_latencies` on an ExplicitFleet
+    with ``com_cost == com``.  ``nz_eps`` mirrors CostConfig.nz_eps for the
+    enabledLinks indicator.
+    """
+    src, dst, sel = _edge_arrays(graph)
+    src_j = jnp.asarray(src)
+    dst_j = jnp.asarray(dst)
+    sel_j = jnp.asarray(sel)
+    alpha = cfg.alpha
+
+    def elat(x: jnp.ndarray, com: jnp.ndarray) -> jnp.ndarray:
+        x_i = x[src_j] * sel_j[:, None]           # (E, V)
+        x_j = x[dst_j]                            # (E, V)
+        t = jnp.einsum("uv,ev->eu", com, x_j)     # (E, V)
+        out = jnp.max(x_i * t, axis=1)            # (E,)
+        if alpha:
+            nz = (x > nz_eps).astype(x.dtype)  # hard indicator, paper-exact
+            counts = nz.sum(axis=1)               # (n_ops,)
+            both = (nz[src_j] * nz[dst_j]).sum(axis=1)
+            out = out + alpha * (counts[src_j] * counts[dst_j] - both)
+        return out
+
+    return elat
+
+
+def critical_path_dp(graph: OpGraph, elat: jnp.ndarray) -> jnp.ndarray:
+    """(..., E) edge latencies → (...,) critical-path latency.
+
+    The DP unrolls over the static topo order with whatever leading batch
+    shape ``elat`` carries — the single implementation shared by the scalar
+    com-fn below and the batched evaluator (repro.sim.batched), so the
+    oracle-matching max/DP semantics live in exactly one place.
+    """
+    zero = jnp.zeros(elat.shape[:-1], dtype=elat.dtype)
+    dist: dict[int, jnp.ndarray] = {}
+    for i in graph.topo_order:
+        incoming = [dist[ip] + elat[..., e] for ip, e in graph.in_edges(i)]
+        dist[i] = jnp.max(jnp.stack(incoming), axis=0) if incoming else zero
+    sinks = graph.sinks
+    return jnp.max(jnp.stack([dist[s] for s in sinks]), axis=0) \
+        if sinks else zero
+
+
+def make_latency_com_fn(graph: OpGraph, cfg: SmoothConfig = SmoothConfig(),
+                        nz_eps: float = 0.0):
+    """Returns ``lat(x, com) -> scalar``: critical-path DP over the traced
+    com matrix.  vmap/jit-compatible twin of costmodel.latency for scenario
+    batching (repro.sim.batched vmaps it)."""
+    elat_fn = make_edge_latencies_com_fn(graph, cfg, nz_eps)
+
+    def lat(x: jnp.ndarray, com: jnp.ndarray) -> jnp.ndarray:
+        return critical_path_dp(graph, elat_fn(x, com))
+
+    return lat
 
 
 @partial(jax.jit, static_argnames=("n_candidates",))

@@ -43,6 +43,7 @@ __all__ = [
     "simulated_annealing",
     "projected_gradient",
     "random_search",
+    "scenario_robust_search",
 ]
 
 Fleet = ExplicitFleet | RegionFleet
@@ -317,6 +318,22 @@ def projected_gradient(prob: PlacementProblem, steps: int = 400,
         if f < best_f:
             best_f, best_dq, best_x = f, dq, xf
     return OptResult.of(prob, best_x, best_dq, history, evals)
+
+
+# -- scenario-robust search (min–max over a generated what-if family) ---------
+
+def scenario_robust_search(graph: OpGraph, scenarios, rng: np.random.Generator,
+                           **kwargs) -> OptResult:
+    """Placement minimizing WORST-CASE F over a scenario batch.
+
+    Delegator: the implementation lives in
+    :func:`repro.sim.replay.scenario_robust_search` (sim builds on core, so
+    the import here stays function-local to keep core importable without
+    sim and the package dependency arrow one-directional).
+    """
+    from repro.sim.replay import scenario_robust_search as impl
+
+    return impl(graph, scenarios, rng, **kwargs)
 
 
 # -- vectorized random search -------------------------------------------------

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel for the cost model's hot edge-latency reduction.
+
+The paper's edge latency (§3) is, per edge ``i→j`` with placement rows
+``x_i``/``x_j`` and communication matrix ``com``:
+
+    edgeLat = max_u  x_{i,u} · s_i · Σ_v com_{u,v} · x_{j,v}
+
+The batched what-if evaluator (repro.sim.batched) scores (scenario ×
+placement) grids, so the reduction runs over a (B, E, V) tensor of gathered
+edge endpoint rows against a (B, V, V) tensor of per-scenario com matrices —
+a fused matvec + row-max that dominates evaluation time once B·E·V² grows.
+
+One grid step handles one (scenario, edge-block) tile: the com matrix stays
+resident in VMEM across the edge blocks of a scenario while ``x`` tiles
+stream through — one HBM read per operand, one write per (B, E) tile.
+Selectivity is folded into ``x_i`` by the caller, keeping the kernel a pure
+bilinear-max.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.compat import tpu_compiler_params
+
+__all__ = ["edge_latency_pallas"]
+
+
+def _edge_latency_kernel(xi_ref, xj_ref, com_ref, o_ref):
+    xi = xi_ref[0].astype(jnp.float32)    # (be, V) — pre-scaled by s_i
+    xj = xj_ref[0].astype(jnp.float32)    # (be, V)
+    com = com_ref[0].astype(jnp.float32)  # (V, V)
+    # t[e, u] = Σ_v com[u, v] · xj[e, v]
+    t = jax.lax.dot_general(xj, com, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    o_ref[0] = jnp.max(xi * t, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_edges", "interpret"))
+def edge_latency_pallas(x_i, x_j, com, block_edges: int = 128,
+                        interpret: bool = False):
+    """x_i, x_j: (B, E, V) with selectivity folded into x_i; com: (B, V, V)
+    or (1, V, V) → (B, E) latencies ``max_u x_i[b,e,u]·(com[b] @ x_j[b,e])_u``.
+
+    A singleton com batch dim is shared across B via the index map (no
+    replication in HBM) — the score-grid path scores every placement of one
+    scenario against a single resident com matrix."""
+    B, E, V = x_i.shape
+    if E == 0:
+        return jnp.zeros((B, 0), jnp.float32)
+    if com.shape[0] not in (1, B):
+        raise ValueError(f"com batch dim {com.shape[0]} must be 1 or {B}")
+    shared_com = com.shape[0] == 1
+    be = min(block_edges, E)
+    pad = (-E) % be
+    if pad:
+        zeros = jnp.zeros((B, pad, V), x_i.dtype)
+        x_i = jnp.concatenate([x_i, zeros], axis=1)
+        x_j = jnp.concatenate([x_j, zeros.astype(x_j.dtype)], axis=1)
+    n_blocks = x_i.shape[1] // be
+    com_index = (lambda b, e: (0, 0, 0)) if shared_com \
+        else (lambda b, e: (b, 0, 0))
+    out = pl.pallas_call(
+        _edge_latency_kernel,
+        grid=(B, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, be, V), lambda b, e: (b, e, 0)),
+            pl.BlockSpec((1, be, V), lambda b, e: (b, e, 0)),
+            pl.BlockSpec((1, V, V), com_index),
+        ],
+        out_specs=pl.BlockSpec((1, be), lambda b, e: (b, e)),
+        out_shape=jax.ShapeDtypeStruct((B, x_i.shape[1]), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x_i, x_j, com)
+    return out[:, :E]

@@ -19,7 +19,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro.kernels.compat import tpu_compiler_params
 
 __all__ = ["flash_attention_pallas"]
 
@@ -103,7 +105,7 @@ def flash_attention_pallas(q, k, v, causal: bool = True, bq: int = 128,
             pltpu.VMEM((bq,), jnp.float32),       # l (running denom)
             pltpu.VMEM((bq, D), jnp.float32),     # acc
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qf, kf, vf)

@@ -9,11 +9,12 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.kernels.edge_latency import edge_latency_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
-__all__ = ["flash_attention", "ssd_scan", "rmsnorm"]
+__all__ = ["flash_attention", "ssd_scan", "rmsnorm", "edge_latency_max"]
 
 
 def flash_attention(q, k, v, causal: bool = True, interpret: bool = False,
@@ -36,6 +37,16 @@ def ssd_scan(x, B, C, dt, A, D, chunk: int = 128, head_block: int = 8,
 
 def rmsnorm(x, w, eps: float = 1e-6, interpret: bool = False):
     return rmsnorm_pallas(x, w, eps=eps, interpret=interpret)
+
+
+def edge_latency_max(x_i, x_j, com, interpret: bool = False,
+                     block_edges: int = 128):
+    """(B, E) fused ``max_u x_i·(com @ x_j)`` — see kernels/edge_latency.py.
+
+    No divisor shrinking here: the kernel pads E up to the block size, so a
+    prime E still runs one full tile instead of E degenerate ones."""
+    return edge_latency_pallas(x_i, x_j, com, block_edges=block_edges,
+                               interpret=interpret)
 
 
 def _largest_divisor_block(n: int, target: int) -> int:

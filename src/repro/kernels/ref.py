@@ -10,7 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["flash_attention_ref", "ssd_ref", "rmsnorm_ref"]
+__all__ = ["flash_attention_ref", "ssd_ref", "rmsnorm_ref",
+           "edge_latency_ref"]
 
 
 def flash_attention_ref(q, k, v, causal: bool = True):
@@ -57,3 +58,13 @@ def rmsnorm_ref(x, w, eps: float = 1e-6):
     xf = x.astype(jnp.float32)
     y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
     return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def edge_latency_ref(x_i, x_j, com):
+    """x_i, x_j: (B, E, V) (selectivity folded into x_i); com: (B, V, V).
+
+    out[b, e] = max_u x_i[b,e,u] · Σ_v com[b,u,v] · x_j[b,e,v] — the paper's
+    per-edge bilinear-max, fully materialized."""
+    t = jnp.einsum("buv,bev->beu", com.astype(jnp.float32),
+                   x_j.astype(jnp.float32))
+    return jnp.max(x_i.astype(jnp.float32) * t, axis=-1)

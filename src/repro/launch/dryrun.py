@@ -42,7 +42,8 @@ def _build_cell(arch: str, shape_name: str, multi_pod: bool, variant: str):
     from jax.sharding import PartitionSpec as P
 
     from repro.configs import SHAPES, get_config, shape_skip_reason
-    from repro.launch.mesh import make_production_mesh, mesh_chips
+    from repro.launch.mesh import (make_production_mesh, mesh_chips,
+                                  named_shardings, use_mesh)
     from repro.launch.shardings import (batch_specs, cache_len, fsdp_specs,
                                         input_specs)
     from repro.models.api import analytic_flops, build_model, count_params
@@ -141,7 +142,7 @@ def _build_cell(arch: str, shape_name: str, multi_pod: bool, variant: str):
                       "remat": cfg.remat, "param_dtype": cfg.param_dtype},
     }
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         params_sds = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
         pspecs = model.param_specs()
         if fsdp_embed != "none":
@@ -172,9 +173,9 @@ def _build_cell(arch: str, shape_name: str, multi_pod: bool, variant: str):
                                    microbatches=microbatches)
             jitted = jax.jit(
                 step,
-                in_shardings=(pspecs, ospecs, jax.tree.map(
-                    lambda s: s.sharding.spec, batch_sds)),
-                out_shardings=(pspecs, ospecs, None),
+                in_shardings=named_shardings(mesh, (pspecs, ospecs,
+                    jax.tree.map(lambda s: s.sharding.spec, batch_sds))),
+                out_shardings=named_shardings(mesh, (pspecs, ospecs, None)),
                 donate_argnums=(0, 1))
             lowered = jitted.lower(with_spec(params_sds, pspecs),
                                    with_spec(opt_sds, ospecs), batch_sds)
@@ -188,9 +189,9 @@ def _build_cell(arch: str, shape_name: str, multi_pod: bool, variant: str):
                 step = make_prefill_step(model, cfg)
                 jitted = jax.jit(
                     step,
-                    in_shardings=(pspecs,
-                                  jax.tree.map(lambda s: s.sharding.spec,
-                                               batch_sds), cspecs),
+                    in_shardings=named_shardings(mesh, (pspecs,
+                        jax.tree.map(lambda s: s.sharding.spec, batch_sds),
+                        cspecs)),
                     donate_argnums=(2,))
                 lowered = jitted.lower(with_spec(params_sds, pspecs),
                                        batch_sds, cache_sds)
@@ -198,8 +199,8 @@ def _build_cell(arch: str, shape_name: str, multi_pod: bool, variant: str):
                 step = make_decode_step(model, cfg)
                 jitted = jax.jit(
                     step,
-                    in_shardings=(pspecs, cspecs, P(),
-                                  batch_specs(mesh, shape.global_batch)),
+                    in_shardings=named_shardings(mesh, (pspecs, cspecs, P(),
+                        batch_specs(mesh, shape.global_batch))),
                     donate_argnums=(1,))
                 pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
                 lowered = jitted.lower(with_spec(params_sds, pspecs),

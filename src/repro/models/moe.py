@@ -51,9 +51,9 @@ def _expert_axes(cfg: ModelConfig):
     weights stationary 256-way — E over `data`, d_ff over `model` — so
     *tokens* move (all-to-all) instead of weights (FSDP all-gather), and
     expert grads are born fully sharded."""
-    from repro.models.sharding import axis_rules
-    mesh = jax.sharding.get_abstract_mesh()
-    sizes = dict(mesh.shape) if mesh is not None and not mesh.empty else {}
+    from repro.models.sharding import _active_mesh, axis_rules
+    mesh = _active_mesh()
+    sizes = dict(mesh.shape) if mesh is not None else {}
     target = axis_rules().rules.get("experts")
     axes = (target,) if isinstance(target, str) else (target or ())
     axes = tuple(a for a in axes if a in sizes)

@@ -78,7 +78,16 @@ def axis_rules() -> AxisRules:
 
 
 def _active_mesh() -> jax.sharding.Mesh | None:
-    m = jax.sharding.get_abstract_mesh()
+    # jax ≥ 0.5 exposes the context mesh as jax.sharding.get_abstract_mesh;
+    # on older releases fall back to the thread-resources physical mesh that
+    # `with mesh:` installs.
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:
+        m = getter()
+    else:
+        from jax.interpreters import pxla
+
+        m = pxla.thread_resources.env.physical_mesh
     if m is None or m.empty:
         return None
     return m

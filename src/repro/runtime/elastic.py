@@ -34,9 +34,9 @@ class RescalePlan:
 def rebuild_mesh(n_devices: int, model_ways: int) -> jax.sharding.Mesh:
     if n_devices % model_ways:
         raise ValueError(f"{n_devices} devices not divisible by model={model_ways}")
-    return jax.make_mesh(
-        (n_devices // model_ways, model_ways), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+
+    return make_mesh((n_devices // model_ways, model_ways), ("data", "model"))
 
 
 def plan_rescale(old_devices: int, surviving: int, model_ways: int,

@@ -1,0 +1,20 @@
+"""Scenario simulation: generated what-if families, batched evaluation,
+trace replay (see sim/README.md for the generators → batched eval → replay
+pipeline)."""
+
+from repro.sim.batched import BatchedEvaluator, pack_fleets, pack_placements
+from repro.sim.replay import (ReplayReport, ReplayStep, replay_trace,
+                              robust_placement, scenario_robust_search)
+from repro.sim.scenarios import (Scenario, ScenarioConfig, TraceEvent,
+                                 diurnal_rate, perturbed_fleet, random_fleet,
+                                 random_graph, random_scenario, random_trace,
+                                 scenario_batch)
+
+__all__ = [
+    "BatchedEvaluator", "pack_fleets", "pack_placements",
+    "ReplayReport", "ReplayStep", "replay_trace", "robust_placement",
+    "scenario_robust_search",
+    "Scenario", "ScenarioConfig", "TraceEvent", "diurnal_rate",
+    "perturbed_fleet", "random_fleet", "random_graph", "random_scenario",
+    "random_trace", "scenario_batch",
+]

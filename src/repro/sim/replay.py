@@ -1,0 +1,177 @@
+"""Trace replay and robustness: run generated scenarios through the real
+StreamingEngine and pick placements that survive the whole family.
+
+Two instruments:
+
+  * :func:`replay_trace` — drive a StreamingEngine through a generated
+    event trace (diurnal/burst ticks, ``degrade``/``remove`` fleet events
+    mapped onto the engine's straggler/elasticity hooks) and report the
+    modeled-vs-observed latency drift per scenario.  Drift is the evidence
+    the paper's model tracks reality as conditions shift.
+  * :func:`robust_placement` — min–max placement selection over a scenario
+    batch: among P candidates, take the one minimizing worst-case F across
+    S fleets, scored by the batched evaluator in one dispatch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.costmodel import CostConfig, latency, objective_F
+from repro.core.graph import OpGraph
+from repro.core.placement import random_placement, uniform_placement
+from repro.sim.batched import BatchedEvaluator, pack_fleets, pack_placements
+from repro.sim.scenarios import Scenario, TraceEvent
+
+__all__ = ["ReplayStep", "ReplayReport", "replay_trace", "robust_placement",
+           "scenario_robust_search"]
+
+
+@dataclasses.dataclass
+class ReplayStep:
+    t: int
+    kind: str
+    rate: float
+    rows_in: int
+    modeled_latency: float
+    observed_busy: float  # max per-device busy seconds this tick
+    n_devices: int
+
+
+@dataclasses.dataclass
+class ReplayReport:
+    scenario: str
+    steps: list[ReplayStep]
+    n_degrades: int
+    n_removes: int
+
+    @property
+    def modeled(self) -> np.ndarray:
+        return np.array([s.modeled_latency for s in self.steps])
+
+    @property
+    def observed(self) -> np.ndarray:
+        return np.array([s.observed_busy for s in self.steps])
+
+    def drift(self) -> dict:
+        """Modeled-vs-observed latency drift over the trace.
+
+        The engine's observed busy time and the model's latency live in
+        different units, so drift is measured on *normalized* series: the
+        std of the per-tick ratio around its mean (0 ⇒ the model tracks
+        observation perfectly up to a constant factor)."""
+        m, o = self.modeled, self.observed
+        keep = (m > 0) & (o > 0)
+        if keep.sum() < 2:
+            return {"ratio_mean": float("nan"), "ratio_rel_std": float("nan"),
+                    "n_ticks": int(keep.sum())}
+        r = o[keep] / m[keep]
+        return {"ratio_mean": float(r.mean()),
+                "ratio_rel_std": float(r.std() / (r.mean() + 1e-12)),
+                "n_ticks": int(keep.sum())}
+
+
+def replay_trace(engine, trace: list[TraceEvent], rng: np.random.Generator,
+                 row_width: int = 4, beta: float = 0.0,
+                 name: str = "scenario") -> ReplayReport:
+    """Drive ``engine`` (repro.streaming.engine.StreamingEngine) through the
+    trace.  Device ids in fleet events index the *original* fleet; removals
+    shift the survivors, so ids are remapped through the engine's live
+    device count (events on already-dead devices are dropped)."""
+    steps: list[ReplayStep] = []
+    n_deg = n_rem = 0
+    alive = list(range(engine.fleet.n_devices))
+    for ev in trace:
+        if ev.kind in ("rate", "burst"):
+            rows = max(int(ev.rate), 1)
+            batch = rng.normal(size=(rows, row_width))
+            rep = engine.run_batch(batch)
+            steps.append(ReplayStep(
+                t=ev.t, kind=ev.kind, rate=ev.rate, rows_in=rep.rows_in,
+                modeled_latency=rep.modeled_latency,
+                observed_busy=float(rep.device_busy.max(initial=0.0)),
+                n_devices=engine.fleet.n_devices))
+        elif ev.kind == "degrade":
+            if ev.device in alive:
+                engine.apply_event("degrade", alive.index(ev.device),
+                                   factor=ev.factor, beta=beta)
+                n_deg += 1
+        elif ev.kind == "remove":
+            if ev.device in alive and len(alive) > 1:
+                engine.apply_event("remove", alive.index(ev.device),
+                                   beta=beta)
+                alive.remove(ev.device)
+                n_rem += 1
+        else:
+            raise ValueError(f"unknown trace event kind {ev.kind!r}")
+    return ReplayReport(scenario=name, steps=steps, n_degrades=n_deg,
+                        n_removes=n_rem)
+
+
+def robust_placement(graph: OpGraph, scenarios: list[Scenario],
+                     rng: np.random.Generator, n_candidates: int = 256,
+                     cfg: CostConfig = CostConfig(), beta: float = 0.0,
+                     dq: float = 0.0, sparsity: float = 0.5,
+                     extra_candidates: list[np.ndarray] | None = None,
+                     use_pallas: bool = False):
+    """Min–max what-if selection: the placement minimizing worst-case F over
+    the scenario batch.
+
+    Returns ``(x_best, worst_F, grid)`` where grid is the full (S, P) score
+    matrix (useful for regret analysis: column min vs row min)."""
+    if not scenarios:
+        raise ValueError("need at least one scenario")
+    n_dev = scenarios[0].n_devices
+    avail = np.ones((graph.n_ops, n_dev), dtype=bool)
+    candidates = [uniform_placement(graph.n_ops, avail)]
+    candidates += [random_placement(graph.n_ops, avail, rng, sparsity)
+                   for _ in range(max(n_candidates - 1, 0))]
+    if extra_candidates:
+        candidates += [np.asarray(x) for x in extra_candidates]
+    ev = BatchedEvaluator(graph, cfg, use_pallas=use_pallas)
+    grid = np.asarray(ev.score_grid(
+        pack_placements(candidates),
+        pack_fleets([s.fleet for s in scenarios]),
+        dq=dq, beta=beta))                     # (S, P)
+    worst = grid.max(axis=0)                   # (P,) worst case per candidate
+    k = int(worst.argmin())
+    return candidates[k], float(worst[k]), grid
+
+
+def scenario_robust_search(graph: OpGraph, scenarios: list[Scenario],
+                           rng: np.random.Generator, n_candidates: int = 512,
+                           cost_cfg: CostConfig = CostConfig(),
+                           beta: float = 0.0, dq: float = 0.0,
+                           sparsity: float = 0.5, warm_start: bool = True):
+    """Optimizer-grade wrapper around :func:`robust_placement`.
+
+    Random candidates are scored against every scenario fleet in one
+    batched dispatch; ``warm_start`` additionally seeds per-scenario greedy
+    optima (each scenario's best placement competes for the min–max crown —
+    cheap and often the winner when one fleet dominates the worst case).
+    The returned OptResult's F/latency are for the worst-case scenario,
+    recomputed with the exact oracle on the winning placement.
+
+    Also reachable as ``repro.core.scenario_robust_search`` (a delegator —
+    the implementation lives here so the dependency arrow stays sim → core).
+    """
+    from repro.core.optimizers import (OptResult, PlacementProblem,
+                                       greedy_transfer)
+
+    extra = []
+    if warm_start:
+        for s in scenarios[: min(len(scenarios), 4)]:
+            prob = PlacementProblem(graph, s.fleet, cost_cfg, beta=beta)
+            extra.append(greedy_transfer(prob, max_rounds=10).x)
+    x, worst_F, grid = robust_placement(
+        graph, scenarios, rng, n_candidates=n_candidates, cfg=cost_cfg,
+        beta=beta, dq=dq, sparsity=sparsity, extra_candidates=extra)
+    # worst-case scenario of the winner via the exact oracle (independent of
+    # the grid's candidate ordering); F shares the (1+β·dq) factor across
+    # scenarios, so argmax latency == argmax F
+    lat = max(latency(graph, s.fleet, x, cost_cfg) for s in scenarios)
+    return OptResult(x=x, dq_fraction=dq, F=objective_F(lat, dq, beta),
+                     latency=lat, history=[worst_F],
+                     evals=int(np.asarray(grid).size))

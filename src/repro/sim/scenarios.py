@@ -1,0 +1,256 @@
+"""Scenario generators: parameterized random families of geo-fleets, DAG
+topologies, and streaming workload traces.
+
+COSTREAM-style cost models earn their keep when evaluated over large
+families of *unseen* operator/hardware combinations, not one hand-built
+instance.  This module is the family factory:
+
+  * fleets  — region counts, heterogeneous device speeds, and com-cost
+    distributions drawn from lognormals (WAN links are heavy-tailed);
+  * graphs  — chains, diamonds, fan-in/fan-out, layered random DAGs
+    (the paper's Table 2 topologies, randomized);
+  * traces  — diurnal rate curves with burst injections plus timed device
+    degradations/losses, replayable through the StreamingEngine
+    (repro.sim.replay).
+
+``scenario_batch`` fixes one job graph and device count so the resulting
+(placement × fleet) tensors stack — the contract the batched evaluator
+(repro.sim.batched) scores in one dispatch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.devices import ExplicitFleet, RegionFleet
+from repro.core.graph import Operator, OpGraph, random_dag
+
+__all__ = [
+    "ScenarioConfig",
+    "TraceEvent",
+    "Scenario",
+    "random_fleet",
+    "perturbed_fleet",
+    "random_graph",
+    "diurnal_rate",
+    "random_trace",
+    "random_scenario",
+    "scenario_batch",
+]
+
+GRAPH_FAMILIES = ("chain", "diamond", "fan_out", "fan_in", "layered")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioConfig:
+    """Knobs of the random scenario family (all distributions, no fixtures).
+
+    Fleet: ``n_regions`` regions of ``devices_per_region`` devices; link
+    costs are lognormal(``com_logmean``, ``com_logstd``) between regions and
+    ``intra_discount``× that within one; device speeds are lognormal around
+    1.  Trace: ``trace_len`` ticks of a diurnal curve with amplitude
+    ``diurnal_amplitude`` around ``base_rate`` rows/tick, plus bursts
+    (``burst_prob`` per tick, ×``burst_factor``) and fleet events
+    (``degrade_prob``/``loss_prob`` per tick).
+    """
+
+    n_regions: tuple[int, int] = (2, 5)
+    devices_per_region: tuple[int, int] = (2, 6)
+    com_logmean: float = 0.0
+    com_logstd: float = 0.6
+    intra_discount: float = 0.1
+    speed_logstd: float = 0.3
+    graph_families: tuple[str, ...] = GRAPH_FAMILIES
+    n_ops: tuple[int, int] = (4, 10)
+    max_selectivity: float = 2.0
+    trace_len: int = 48
+    base_rate: float = 256.0
+    diurnal_amplitude: float = 0.6
+    diurnal_period: int = 24
+    burst_prob: float = 0.08
+    burst_factor: float = 4.0
+    degrade_prob: float = 0.04
+    degrade_factor: tuple[float, float] = (2.0, 8.0)
+    loss_prob: float = 0.02
+    explicit_fleet: bool = True  # materialize ExplicitFleet (else RegionFleet)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEvent:
+    """One tick of a workload trace.
+
+    kind: "rate" (plain tick), "burst" (rate spike), "degrade" (device's
+    links/compute get ``factor``× slower), "remove" (device loss).
+    """
+
+    t: int
+    kind: str
+    rate: float
+    device: int = -1
+    factor: float = 1.0
+
+
+@dataclasses.dataclass
+class Scenario:
+    """One generated what-if world: a job graph on a fleet under a trace."""
+
+    name: str
+    graph: OpGraph
+    fleet: ExplicitFleet | RegionFleet
+    trace: list[TraceEvent]
+    beta: float = 0.0
+    dq_fraction: float = 0.0
+
+    @property
+    def n_devices(self) -> int:
+        return self.fleet.n_devices
+
+
+# -- fleets -------------------------------------------------------------------
+
+def random_fleet(rng: np.random.Generator, cfg: ScenarioConfig = ScenarioConfig(),
+                 n_devices: int | None = None):
+    """Random geo-fleet.  ``n_devices`` pins the device count (so fleets of
+    one scenario batch stack); regions then get a random partition of it."""
+    n_regions = int(rng.integers(cfg.n_regions[0], cfg.n_regions[1] + 1))
+    if n_devices is None:
+        per = rng.integers(cfg.devices_per_region[0],
+                           cfg.devices_per_region[1] + 1, n_regions)
+    else:
+        n_regions = min(n_regions, n_devices)
+        per = np.ones(n_regions, dtype=np.int64)
+        extra = rng.multinomial(n_devices - n_regions,
+                                np.ones(n_regions) / n_regions)
+        per = per + extra
+    region = np.repeat(np.arange(n_regions), per)
+    inter = rng.lognormal(cfg.com_logmean, cfg.com_logstd,
+                          (n_regions, n_regions))
+    inter = (inter + inter.T) / 2.0
+    np.fill_diagonal(inter, np.diag(inter) * cfg.intra_discount)
+    speed = rng.lognormal(0.0, cfg.speed_logstd, region.size)
+    rf = RegionFleet(region=region, inter=inter, self_cost=0.0, speed=speed)
+    if not cfg.explicit_fleet:
+        return rf
+    return ExplicitFleet(com_cost=rf.com_matrix(), speed=speed, region=region)
+
+
+def perturbed_fleet(fleet, rng: np.random.Generator, jitter: float = 0.3):
+    """A nearby what-if fleet: every link cost multiplied by an independent
+    lognormal(1, jitter) factor (symmetric).  Used to turn one measured
+    fleet into a robustness family."""
+    com = np.asarray(fleet.com_matrix(), dtype=np.float64)
+    noise = rng.lognormal(0.0, jitter, com.shape)
+    noise = (noise + noise.T) / 2.0
+    com2 = com * noise
+    np.fill_diagonal(com2, np.diag(com))
+    return ExplicitFleet(com_cost=com2, speed=fleet.speed.copy(),
+                         region=getattr(fleet, "region", None))
+
+
+# -- graphs -------------------------------------------------------------------
+
+def _sel(rng: np.random.Generator, cfg: ScenarioConfig) -> float:
+    return float(rng.uniform(0.1, cfg.max_selectivity))
+
+
+def random_graph(rng: np.random.Generator,
+                 cfg: ScenarioConfig = ScenarioConfig(),
+                 family: str | None = None) -> OpGraph:
+    """One topology drawn from the configured families."""
+    family = family or cfg.graph_families[
+        int(rng.integers(len(cfg.graph_families)))]
+    n = int(rng.integers(cfg.n_ops[0], cfg.n_ops[1] + 1))
+    if family == "chain":
+        ops = [Operator(f"op{i}", _sel(rng, cfg)) for i in range(n)]
+        return OpGraph(ops, [(i, i + 1) for i in range(n - 1)])
+    if family == "diamond":
+        width = max(n - 2, 2)
+        ops = ([Operator("src", 1.0)]
+               + [Operator(f"mid{k}", _sel(rng, cfg)) for k in range(width)]
+               + [Operator("sink", 1.0)])
+        edges = [(0, 1 + k) for k in range(width)] \
+            + [(1 + k, 1 + width) for k in range(width)]
+        return OpGraph(ops, edges)
+    if family == "fan_out":
+        ops = [Operator("src", 1.0)] \
+            + [Operator(f"leaf{k}", _sel(rng, cfg)) for k in range(n - 1)]
+        return OpGraph(ops, [(0, k) for k in range(1, n)])
+    if family == "fan_in":
+        ops = [Operator(f"feed{k}", _sel(rng, cfg)) for k in range(n - 1)] \
+            + [Operator("agg", 1.0)]
+        return OpGraph(ops, [(k, n - 1) for k in range(n - 1)])
+    if family == "layered":
+        return random_dag(n, edge_prob=0.45, rng=rng,
+                          max_selectivity=cfg.max_selectivity)
+    raise ValueError(f"unknown graph family {family!r}; "
+                     f"choose from {GRAPH_FAMILIES}")
+
+
+# -- traces -------------------------------------------------------------------
+
+def diurnal_rate(t: int, cfg: ScenarioConfig = ScenarioConfig(),
+                 phase: float = 0.0) -> float:
+    """Rows per tick on the daily sine: base·(1 + A·sin(2πt/period + φ))."""
+    return cfg.base_rate * (
+        1.0 + cfg.diurnal_amplitude
+        * math.sin(2.0 * math.pi * t / cfg.diurnal_period + phase))
+
+
+def random_trace(rng: np.random.Generator, n_devices: int,
+                 cfg: ScenarioConfig = ScenarioConfig()) -> list[TraceEvent]:
+    """A timed event sequence; at most one fleet event per tick, never
+    removing below 2 devices (the engine needs somewhere to re-place)."""
+    phase = float(rng.uniform(0.0, 2.0 * math.pi))
+    alive = list(range(n_devices))
+    events: list[TraceEvent] = []
+    for t in range(cfg.trace_len):
+        rate = diurnal_rate(t, cfg, phase)
+        kind = "rate"
+        if rng.random() < cfg.burst_prob:
+            kind, rate = "burst", rate * cfg.burst_factor
+        events.append(TraceEvent(t=t, kind=kind, rate=rate))
+        roll = rng.random()
+        if roll < cfg.loss_prob and len(alive) > 2:
+            dead = alive.pop(int(rng.integers(len(alive))))
+            events.append(TraceEvent(t=t, kind="remove", rate=0.0,
+                                     device=dead))
+        elif roll < cfg.loss_prob + cfg.degrade_prob and alive:
+            events.append(TraceEvent(
+                t=t, kind="degrade", rate=0.0,
+                device=alive[int(rng.integers(len(alive)))],
+                factor=float(rng.uniform(*cfg.degrade_factor))))
+    return events
+
+
+# -- whole scenarios ----------------------------------------------------------
+
+def random_scenario(rng: np.random.Generator,
+                    cfg: ScenarioConfig = ScenarioConfig(),
+                    graph: OpGraph | None = None,
+                    n_devices: int | None = None,
+                    name: str = "scenario") -> Scenario:
+    g = graph if graph is not None else random_graph(rng, cfg)
+    fleet = random_fleet(rng, cfg, n_devices=n_devices)
+    trace = random_trace(rng, fleet.n_devices, cfg)
+    return Scenario(name=name, graph=g, fleet=fleet, trace=trace)
+
+
+def scenario_batch(rng: np.random.Generator, n_scenarios: int,
+                   cfg: ScenarioConfig = ScenarioConfig(),
+                   graph: OpGraph | None = None,
+                   n_devices: int | None = None) -> list[Scenario]:
+    """N what-if worlds sharing ONE graph and device count — the stackable
+    family the batched evaluator scores as a (scenario × placement) grid."""
+    g = graph if graph is not None else random_graph(rng, cfg)
+    if n_devices is None:
+        lo, hi = cfg.n_regions, cfg.devices_per_region
+        n_devices = int(rng.integers(lo[0], lo[1] + 1)) \
+            * int(rng.integers(hi[0], hi[1] + 1))
+    return [
+        random_scenario(rng, cfg, graph=g, n_devices=n_devices,
+                        name=f"scenario{k}")
+        for k in range(n_scenarios)
+    ]

@@ -96,6 +96,18 @@ class StreamingEngine:
         return BatchReport(lat, elat, busy, len(batch), rows_out,
                            time.perf_counter() - t0)
 
+    # ------------------------------------------------------- trace hooks --
+    def apply_event(self, kind: str, device: int, factor: float = 1.0,
+                    beta: float = 0.0):
+        """Uniform entry point for replayed trace events (repro.sim.replay):
+        ``degrade`` → degrade_and_replace, ``remove`` → remove_device.
+        ``device`` indexes the CURRENT fleet."""
+        if kind == "degrade":
+            return self.degrade_and_replace(device, factor, beta=beta)
+        if kind == "remove":
+            return self.remove_device(device, beta=beta)
+        raise ValueError(f"unknown event kind {kind!r}")
+
     # ------------------------------------------------- straggler handling --
     def degrade_and_replace(self, device: int, factor: float,
                             beta: float = 0.0):

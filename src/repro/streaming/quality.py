@@ -43,18 +43,39 @@ def quality_scores(tokens: np.ndarray, missing_sentinel: int = -1,
     return (w[0] * completeness + w[1] * validity + w[2] * repetition) / w.sum()
 
 
-def quality_scores_jnp(tokens, missing_sentinel: int = -1):
-    """jnp variant used inside jitted streaming operators."""
+def quality_scores_jnp(tokens, missing_sentinel: int = -1,
+                       weights=(0.5, 0.3, 0.2)):
+    """jnp variant used inside jitted streaming operators.
+
+    Mirrors :func:`quality_scores` term for term (completeness, validity,
+    repetition, same weights) so the two stay interchangeable the way
+    costmodel/jaxmodel are — asserted by a property test.
+    """
+    import jax
     import jax.numpy as jnp
 
+    B, S = tokens.shape
     missing = tokens == missing_sentinel
     completeness = 1.0 - missing.mean(axis=1)
+
     valid = jnp.where(missing, jnp.nan, tokens.astype(jnp.float32))
     mu = jnp.nanmean(valid, axis=1, keepdims=True)
     sd = jnp.nanstd(valid, axis=1, keepdims=True) + 1e-9
     z = jnp.abs((valid - mu) / sd)
     validity = jnp.nan_to_num((z < 4.0).astype(jnp.float32)).mean(axis=1)
-    return 0.6 * completeness + 0.4 * validity
+
+    same = tokens[:, 1:] == tokens[:, :-1]
+
+    def step(carry, col):
+        run, cur = carry
+        cur = jnp.where(col, cur + 1.0, 0.0)
+        return (jnp.maximum(run, cur), cur), None
+
+    (run, _), _ = jax.lax.scan(step, (jnp.zeros(B), jnp.zeros(B)), same.T)
+    repetition = 1.0 - run / max(S - 1, 1)
+
+    w = jnp.asarray(weights)
+    return (w[0] * completeness + w[1] * validity + w[2] * repetition) / w.sum()
 
 
 def dq_latency_model(base_latency: float, dq_fraction: float,

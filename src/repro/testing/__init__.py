@@ -1,0 +1,1 @@
+"""Test-support utilities shared by the pytest suites and benchmarks."""

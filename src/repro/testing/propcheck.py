@@ -1,0 +1,112 @@
+"""Minimal drop-in for the parts of ``hypothesis`` the test suites use.
+
+This container does not ship hypothesis and nothing may be pip-installed,
+so the property-test modules import it defensively:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ModuleNotFoundError:
+        from repro.testing.propcheck import given, settings, strategies as st
+
+Semantics are a strict subset: every ``@given`` test runs ``max_examples``
+deterministic examples (seeded from the test name, so failures reproduce),
+with no shrinking and no example database.  When the real hypothesis is
+available it is preferred automatically by the import dance above.
+"""
+
+from __future__ import annotations
+
+import functools
+import types
+import zlib
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies"]
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    """A value generator: ``example(rng)`` draws one value."""
+
+    def __init__(self, fn):
+        self._fn = fn
+
+    def example(self, rng: np.random.Generator):
+        return self._fn(rng)
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _sampled_from(seq) -> _Strategy:
+    items = list(seq)
+    return _Strategy(lambda rng: items[int(rng.integers(len(items)))])
+
+
+def _floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def _booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def _composite(f):
+    """``@st.composite`` — f(draw, *args) becomes a strategy factory."""
+
+    @functools.wraps(f)
+    def make(*args, **kwargs):
+        def gen(rng):
+            draw = lambda strat: strat.example(rng)
+            return f(draw, *args, **kwargs)
+
+        return _Strategy(gen)
+
+    return make
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers,
+    sampled_from=_sampled_from,
+    floats=_floats,
+    booleans=_booleans,
+    composite=_composite,
+)
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Accepts (and mostly ignores) hypothesis settings kwargs."""
+
+    def deco(fn):
+        fn._prop_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strats, **kw_strats):
+    def deco(fn):
+        def wrapper():
+            # read at CALL time so @settings works both above and below
+            # @given (real hypothesis accepts either ordering)
+            n = getattr(wrapper, "_prop_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = [s.example(rng) for s in arg_strats]
+                drawn_kw = {k: s.example(rng) for k, s in kw_strats.items()}
+                fn(*drawn, **drawn_kw)
+
+        # NOT functools.wraps: copying __wrapped__ would make pytest resolve
+        # the original argument names as fixtures.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        if hasattr(fn, "_prop_max_examples"):  # @settings applied below
+            wrapper._prop_max_examples = fn._prop_max_examples
+        return wrapper
+
+    return deco

@@ -28,7 +28,8 @@ def test_sharded_train_step_runs_and_matches_single_device():
     unsharded single-device run (GSPMD correctness end-to-end)."""
     out = _run("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_mesh, named_shardings, use_mesh
 from repro.configs import get_smoke_config
 from repro.models.api import build_model
 from repro.launch.shardings import fsdp_specs
@@ -49,10 +50,10 @@ step = make_train_step(model, cfg, opt_cfg)
 _, _, m0 = jax.jit(step)(params, opt, batch)
 loss0 = float(m0["loss"])
 
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
-with jax.set_mesh(mesh):
+mesh = make_mesh((2, 4), ("data", "model"))
+with use_mesh(mesh):
     pspecs = fsdp_specs(model.param_specs(), jax.eval_shape(model.init_params, jax.random.PRNGKey(0)), mesh)
-    j = jax.jit(step, in_shardings=(pspecs, None, P("data")))
+    j = jax.jit(step, in_shardings=named_shardings(mesh, (pspecs, None, P("data"))))
     sp = jax.device_put(params, jax.tree.map(lambda s: jax.sharding.NamedSharding(mesh, s), pspecs,
                         is_leaf=lambda x: isinstance(x, P)))
     batch_sh = jax.device_put(batch, jax.sharding.NamedSharding(mesh, P("data")))
@@ -70,7 +71,8 @@ def test_mesh_and_dryrun_cell_on_8_devices():
     (reduced config, 2×4 mesh) lowers, compiles and reports collectives."""
     out = _run("""
 import jax, jax.numpy as jnp
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_mesh, named_shardings, use_mesh
 from repro.configs import get_smoke_config
 from repro.models.api import build_model
 from repro.launch.shardings import fsdp_specs, input_specs
@@ -80,9 +82,9 @@ from repro.train.steps import make_train_step
 import dataclasses
 
 cfg = get_smoke_config("qwen3_32b")
-mesh = jax.make_mesh((2,4), ("data","model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((2,4), ("data","model"))
 model = build_model(cfg)
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     params_sds = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
     pspecs = fsdp_specs(model.param_specs(), params_sds, mesh)
     opt_cfg = AdamWConfig()
@@ -96,8 +98,8 @@ with jax.set_mesh(mesh):
     batch = {k: jax.ShapeDtypeStruct((8, 32), jnp.int32,
              sharding=jax.sharding.NamedSharding(mesh, P("data")))
              for k in ("tokens", "labels")}
-    j = jax.jit(step, in_shardings=(pspecs, ospecs, P("data")),
-                out_shardings=(pspecs, ospecs, None), donate_argnums=(0,1))
+    j = jax.jit(step, in_shardings=named_shardings(mesh, (pspecs, ospecs, P("data"))),
+                out_shardings=named_shardings(mesh, (pspecs, ospecs, None)), donate_argnums=(0,1))
     comp = j.lower(ws(params_sds, pspecs), ws(opt_sds, ospecs), batch).compile()
     stats = analyze_module(comp.as_text())
     mem = comp.memory_analysis()

@@ -1,0 +1,63 @@
+"""The hypothesis-fallback shim itself: both decorator orderings honor
+max_examples, and draws are deterministic per test name."""
+
+from repro.testing.propcheck import given, settings, strategies as st
+
+
+def test_settings_below_given_honored():
+    calls = []
+
+    @given(st.integers(0, 10))
+    @settings(max_examples=7)
+    def t(n):
+        calls.append(n)
+
+    t()
+    assert len(calls) == 7
+
+
+def test_settings_above_given_honored():
+    calls = []
+
+    @settings(max_examples=9)
+    @given(st.integers(0, 10))
+    def t(n):
+        calls.append(n)
+
+    t()
+    assert len(calls) == 9
+
+
+def test_draws_deterministic_per_name():
+    seen = []
+
+    def make():
+        @given(st.integers(0, 10**6), x=st.sampled_from(["a", "b", "c"]))
+        @settings(max_examples=5)
+        def stable_name(n, x):
+            seen.append((n, x))
+
+        return stable_name
+
+    make()()
+    first = list(seen)
+    seen.clear()
+    make()()
+    assert seen == first
+
+
+def test_composite_draws():
+    @st.composite
+    def pair(draw):
+        return (draw(st.integers(0, 5)), draw(st.booleans()))
+
+    out = []
+
+    @given(pair())
+    @settings(max_examples=4)
+    def t(p):
+        out.append(p)
+
+    t()
+    assert len(out) == 4
+    assert all(0 <= a <= 5 and isinstance(b, bool) for a, b in out)

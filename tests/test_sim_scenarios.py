@@ -1,0 +1,122 @@
+"""Generator validity: random fleets / graphs / traces satisfy the
+structural contracts the batched evaluator and replay depend on."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.devices import ExplicitFleet, RegionFleet
+from repro.sim import (
+    Scenario,
+    ScenarioConfig,
+    diurnal_rate,
+    perturbed_fleet,
+    random_fleet,
+    random_graph,
+    random_trace,
+    scenario_batch,
+)
+from repro.sim.scenarios import GRAPH_FAMILIES
+
+
+def test_random_fleet_structure():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        fleet = random_fleet(rng)
+        com = fleet.com_matrix()
+        assert com.shape == (fleet.n_devices, fleet.n_devices)
+        assert (com >= 0).all()
+        np.testing.assert_allclose(com, com.T)          # symmetric links
+        np.testing.assert_array_equal(np.diag(com), 0)  # local stays free
+        assert (fleet.speed > 0).all()
+
+
+def test_random_fleet_pinned_device_count():
+    rng = np.random.default_rng(1)
+    for n in (2, 5, 17):
+        fleet = random_fleet(rng, n_devices=n)
+        assert fleet.n_devices == n
+
+
+def test_region_fleet_variant():
+    rng = np.random.default_rng(2)
+    cfg = ScenarioConfig(explicit_fleet=False)
+    fleet = random_fleet(rng, cfg)
+    assert isinstance(fleet, RegionFleet)
+    assert fleet.inter.shape == (fleet.n_regions, fleet.n_regions)
+
+
+def test_perturbed_fleet_is_nearby_and_valid():
+    rng = np.random.default_rng(3)
+    base = random_fleet(rng, n_devices=6)
+    pert = perturbed_fleet(base, rng, jitter=0.2)
+    assert isinstance(pert, ExplicitFleet)
+    com0, com1 = base.com_matrix(), pert.com_matrix()
+    np.testing.assert_allclose(com1, com1.T)
+    np.testing.assert_array_equal(np.diag(com1), np.diag(com0))
+    off = ~np.eye(6, dtype=bool)
+    assert not np.allclose(com0[off], com1[off])  # actually perturbed
+    assert (com1[off] > 0).all()
+
+
+@pytest.mark.parametrize("family", GRAPH_FAMILIES)
+def test_random_graph_families(family):
+    rng = np.random.default_rng(4)
+    for _ in range(10):
+        g = random_graph(rng, family=family)
+        assert g.n_ops >= 2 and g.n_edges >= 1
+        assert g.sources and g.sinks        # toposort succeeded ⇒ DAG
+        if family == "fan_out":
+            assert len(g.sinks) == g.n_ops - 1
+        if family == "fan_in":
+            assert len(g.sources) == g.n_ops - 1
+
+
+def test_random_graph_unknown_family():
+    with pytest.raises(ValueError):
+        random_graph(np.random.default_rng(0), family="torus")
+
+
+def test_diurnal_rate_cycles():
+    cfg = ScenarioConfig(base_rate=100.0, diurnal_amplitude=0.5,
+                         diurnal_period=24)
+    rates = [diurnal_rate(t, cfg) for t in range(48)]
+    assert max(rates) == pytest.approx(150.0, rel=0.01)
+    assert min(rates) == pytest.approx(50.0, rel=0.01)
+    assert rates[0] == pytest.approx(rates[24], rel=1e-9)  # periodic
+
+
+def test_random_trace_contract():
+    rng = np.random.default_rng(5)
+    cfg = ScenarioConfig(trace_len=200, loss_prob=0.2, degrade_prob=0.2)
+    n_dev = 6
+    trace = random_trace(rng, n_dev, cfg)
+    removed = set()
+    ticks = [e for e in trace if e.kind in ("rate", "burst")]
+    assert len(ticks) == cfg.trace_len
+    for ev in trace:
+        if ev.kind in ("rate", "burst"):
+            assert ev.rate > 0.0 and math.isfinite(ev.rate)
+        elif ev.kind == "degrade":
+            assert 0 <= ev.device < n_dev and ev.device not in removed
+            assert ev.factor > 1.0
+        elif ev.kind == "remove":
+            assert 0 <= ev.device < n_dev and ev.device not in removed
+            removed.add(ev.device)
+    assert n_dev - len(removed) >= 2  # engine always has somewhere to place
+
+
+def test_scenario_batch_stacks():
+    rng = np.random.default_rng(6)
+    batch = scenario_batch(rng, 5)
+    assert len(batch) == 5
+    g = batch[0].graph
+    v = batch[0].n_devices
+    for s in batch:
+        assert isinstance(s, Scenario)
+        assert s.graph is g            # shared job graph
+        assert s.n_devices == v        # stackable fleets
+    # fleets actually differ across the family
+    assert not np.allclose(batch[0].fleet.com_matrix(),
+                           batch[1].fleet.com_matrix())

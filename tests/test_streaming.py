@@ -107,3 +107,27 @@ def test_rescale_plan():
     assert plan.new_devices % plan.model_ways == 0
     with pytest.raises(ValueError):
         plan_rescale(256, 10, 16, 256)
+
+
+def test_quality_scores_jnp_matches_numpy():
+    """The jnp twin computes the SAME score as the numpy reference —
+    completeness, validity AND repetition, same weights (like the
+    costmodel/jaxmodel pairing)."""
+    from repro.streaming.quality import quality_scores, quality_scores_jnp
+
+    rng = np.random.default_rng(0)
+    for trial in range(8):
+        B, S = int(rng.integers(2, 24)), int(rng.integers(4, 48))
+        toks = rng.integers(-1, 30, (B, S))
+        if trial == 2:
+            toks[0] = 7          # stuck sensor → repetition term must bite
+        if trial == 3:
+            toks[1] = -1         # fully-missing row
+        a = quality_scores(toks)
+        b = np.asarray(quality_scores_jnp(toks))
+        np.testing.assert_allclose(a, b, atol=1e-5)
+    # the repetition term is actually wired in: a stuck row scores lower
+    stuck = np.full((1, 16), 3)
+    varied = np.arange(16).reshape(1, 16) % 7
+    assert float(np.asarray(quality_scores_jnp(stuck))[0]) < \
+        float(np.asarray(quality_scores_jnp(varied))[0])

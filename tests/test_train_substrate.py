@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # container lacks hypothesis — use the shim
+    from repro.testing.propcheck import given, settings, strategies as st
 
 from repro.data.pipeline import PipelineConfig, Prefetcher, TokenStream
 from repro.train.compress import (ErrorFeedbackState, compress_decompress,
@@ -122,8 +125,8 @@ def test_compressed_psum_shard_map():
     if jax.device_count() < 2:
         pytest.skip("needs >1 device (run via subprocess suite)")
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((jax.device_count(),), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((jax.device_count(),), ("pod",))
     from jax.experimental.shard_map import shard_map
     x = jnp.arange(jax.device_count() * 128, dtype=jnp.float32).reshape(
         jax.device_count(), 128)
