@@ -1,0 +1,207 @@
+"""Structured vs dense what-if scoring: score_grid over RegionFleetFamily
+scenario families across a device-count sweep, against the dense (S, V, V)
+path at the V both can run.
+
+The tentpole claim this benchmark records (BENCH_structured.json):
+
+  * the structured path's scenario state is O(S·(R² + V)) — it completes a
+    V = 131 072 grid without ever allocating an (S, V, V) array, far past
+    where the dense pack stops being representable;
+  * at the largest V both paths can run, the structured path holds ≥10×
+    less memory for the scenario family (``memory_headroom_vs_dense``) and
+    is at least as fast per candidate (the CI ``--check`` gate).
+
+Usage:
+  python -m benchmarks.bench_structured            # full sweep
+  python -m benchmarks.bench_structured --smoke    # tiny V (CI)
+  python -m benchmarks.bench_structured --check    # exit 1 if structured
+                                                   # slower than dense
+"""
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import latency, objective_F
+from repro.core.graph import linear_graph
+from repro.core.placement import random_placement
+from repro.sim import (BatchedEvaluator, ScenarioConfig, pack_fleets,
+                       pack_placements, region_fleet_family)
+
+OUT_PATH = Path("BENCH_structured.json")
+
+N_OPS = 12
+N_SCENARIOS = 4
+N_REGIONS = 8
+BYTES_F32 = 4
+
+# (V, n_placements): P shrinks as V grows to bound the (P, E, V) working set
+FULL_SWEEP = [(1024, 64), (16384, 32), (131072, 8)]
+# smoke V sits well above the dense/structured crossover (~300 devices on
+# CPU: below it the dense E·V² matmul is too small for the structured
+# path's scatter/gather overhead to pay off) so the CI speed gate has a
+# several-x margin, not a coin flip
+SMOKE_SWEEP = [(1024, 32)]
+# dense (S, V, V) packs: 1024² · 4 scenarios ≈ 17 MB — past a few thousand
+# devices the pack alone dwarfs memory, which is the point of this bench
+FULL_DENSE_MAX_V = 1024
+SMOKE_DENSE_MAX_V = 1024
+
+
+def _time(f, n=5):
+    """(median seconds, last result) — median over n reps so one noisy CI
+    rep can't flip the --check gate; the result feeds the oracle spot-check
+    without an extra dispatch."""
+    out = f()  # warm (jit compile)
+    times = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        out = f()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)), out
+
+
+def _instance(rng, v: int, n_placements: int):
+    cfg = ScenarioConfig(n_regions=(N_REGIONS, N_REGIONS),
+                         explicit_fleet=False, outage_prob=0.1,
+                         straggler_prob=0.05)
+    fam = region_fleet_family(rng, N_SCENARIOS, cfg, n_devices=v)
+    g = linear_graph([float(s) for s in rng.uniform(0.5, 1.5, N_OPS)])
+    avail = np.ones((N_OPS, v), dtype=bool)
+    xs = [random_placement(N_OPS, avail, rng, 0.5)
+          for _ in range(n_placements)]
+    return g, fam, pack_placements(xs), xs
+
+
+def _state_bytes_structured(v: int) -> int:
+    """Resident scenario-family state: (S, R, R) inter + (S, V) degrade."""
+    return N_SCENARIOS * (N_REGIONS * N_REGIONS + v) * BYTES_F32
+
+
+def _state_bytes_dense(v: int) -> int:
+    """Resident scenario-family state: the (S, V, V) com stack."""
+    return N_SCENARIOS * v * v * BYTES_F32
+
+
+def _peak_bytes(v: int, p: int, e: int, dense: bool) -> int:
+    """Analytic peak estimate: scenario state + placements + the per-scenario
+    (P, E, V) endpoint working set lax.map keeps live (3 dense operands /
+    4 structured plus the (P, E, R) masses)."""
+    placements = p * N_OPS * v * BYTES_F32
+    if dense:
+        return _state_bytes_dense(v) + placements + 3 * p * e * v * BYTES_F32
+    return (_state_bytes_structured(v) + placements
+            + 4 * p * e * v * BYTES_F32
+            + p * e * N_REGIONS * BYTES_F32)
+
+
+def run(smoke: bool = False) -> list[str]:
+    rng = np.random.default_rng(0)
+    sweep = SMOKE_SWEEP if smoke else FULL_SWEEP
+    dense_max_v = SMOKE_DENSE_MAX_V if smoke else FULL_DENSE_MAX_V
+    structured_rows, dense_rows, out_rows = [], [], []
+    common = None  # largest V where both paths ran
+
+    for v, n_placements in sweep:
+        g, fam, placements, xs = _instance(rng, v, n_placements)
+        n_cand = N_SCENARIOS * n_placements
+        ev = BatchedEvaluator(g)
+        s_struct, grid = _time(lambda: np.asarray(
+            ev.score_grid(placements, fam, dq=0.3, beta=0.5)))
+        # spot-check the oracle on the smallest V (cheap there, pure waste
+        # at 10⁵ devices where the oracle itself is the slow path)
+        if v == sweep[0][0]:
+            want = objective_F(latency(g, fam.fleet(0), xs[0]), 0.3, 0.5)
+            err = abs(grid[0, 0] - want) / max(abs(want), 1e-12)
+            if err > 1e-4:
+                raise AssertionError(
+                    f"structured grid disagrees with oracle: rel {err}")
+        row = {
+            "V": v, "R": N_REGIONS, "S": N_SCENARIOS, "P": n_placements,
+            "E": g.n_edges,
+            "seconds_per_grid": s_struct,
+            "candidates_per_second": n_cand / s_struct,
+            "scenario_state_bytes": _state_bytes_structured(v),
+            "peak_bytes_est": _peak_bytes(v, n_placements, g.n_edges,
+                                          dense=False),
+        }
+        structured_rows.append(row)
+        out_rows.append(
+            f"structured_grid_V{v},{s_struct / n_cand * 1e6:.2f},"
+            f"cands_per_s={n_cand / s_struct:.0f}")
+
+        if v <= dense_max_v:
+            coms = pack_fleets(fam.fleets())
+            s_dense, _ = _time(lambda: np.asarray(
+                ev.score_grid(placements, coms, dq=0.3, beta=0.5)))
+            dense_rows.append({
+                "V": v, "S": N_SCENARIOS, "P": n_placements,
+                "seconds_per_grid": s_dense,
+                "candidates_per_second": n_cand / s_dense,
+                "scenario_state_bytes": _state_bytes_dense(v),
+                "peak_bytes_est": _peak_bytes(v, n_placements, g.n_edges,
+                                              dense=True),
+            })
+            out_rows.append(
+                f"dense_grid_V{v},{s_dense / n_cand * 1e6:.2f},"
+                f"cands_per_s={n_cand / s_dense:.0f}")
+            common = (v, s_struct, s_dense)
+
+    report = {
+        "n_ops": N_OPS,
+        "n_scenarios": N_SCENARIOS,
+        "n_regions": N_REGIONS,
+        "smoke": smoke,
+        "structured": structured_rows,
+        "dense": dense_rows,
+    }
+    if common is not None:
+        v, s_struct, s_dense = common
+        report["largest_common_V"] = v
+        report["memory_headroom_vs_dense"] = (
+            _state_bytes_dense(v) / _state_bytes_structured(v))
+        report["peak_headroom_vs_dense"] = (
+            _peak_bytes(v, dict(sweep)[v], N_OPS - 1, True)
+            / _peak_bytes(v, dict(sweep)[v], N_OPS - 1, False))
+        report["structured_speedup_at_common_V"] = s_dense / s_struct
+        out_rows.append(
+            f"structured_headroom_V{v},0.00,"
+            f"mem_headroom={report['memory_headroom_vs_dense']:.0f}x;"
+            f"speedup={report['structured_speedup_at_common_V']:.1f}x")
+    OUT_PATH.write_text(json.dumps(report, indent=2) + "\n")
+    return out_rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny V sweep for CI")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless structured ≥ dense speed and ≥10× "
+                         "memory headroom at the common V")
+    args = ap.parse_args()
+    for row in run(smoke=args.smoke):
+        print(row)
+    if args.check:
+        report = json.loads(OUT_PATH.read_text())
+        speedup = report.get("structured_speedup_at_common_V", 0.0)
+        headroom = report.get("memory_headroom_vs_dense", 0.0)
+        # 0.8x tolerance: the gate catches real regressions (the structured
+        # path sits at several-x above the crossover V), not CI timer noise
+        if speedup < 0.8:
+            print(f"CHECK FAILED: structured path slower than dense at equal "
+                  f"V (speedup {speedup:.2f}x < 0.8x)", file=sys.stderr)
+            sys.exit(1)
+        if headroom < 10.0:
+            print(f"CHECK FAILED: memory headroom {headroom:.1f}x < 10x",
+                  file=sys.stderr)
+            sys.exit(1)
+        print(f"check OK: speedup {speedup:.2f}x, headroom {headroom:.0f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,13 +12,16 @@ from repro.core.costmodel import (
     network_movement,
     objective_F,
 )
-from repro.core.devices import ExplicitFleet, RegionFleet, fleet_from_tpu_mesh
+from repro.core.devices import (ExplicitFleet, RegionFleet, RegionFleetFamily,
+                                fleet_from_tpu_mesh)
 from repro.core.graph import Operator, OpGraph, diamond_graph, linear_graph, random_dag
 from repro.core.jaxmodel import (
     SmoothConfig,
     make_edge_latencies_com_fn,
+    make_edge_latencies_region_fn,
     make_latency_com_fn,
     make_latency_fn,
+    make_latency_region_fn,
     make_objective_fn,
 )
 from repro.core.optimizers import (
@@ -41,10 +44,11 @@ from repro.core.placement import (
 __all__ = [
     "CostConfig", "edge_latencies", "edge_latency", "enabled_links", "latency",
     "latency_via_paths", "network_movement", "objective_F",
-    "ExplicitFleet", "RegionFleet", "fleet_from_tpu_mesh",
+    "ExplicitFleet", "RegionFleet", "RegionFleetFamily", "fleet_from_tpu_mesh",
     "Operator", "OpGraph", "diamond_graph", "linear_graph", "random_dag",
     "SmoothConfig", "make_latency_fn", "make_objective_fn",
     "make_edge_latencies_com_fn", "make_latency_com_fn",
+    "make_edge_latencies_region_fn", "make_latency_region_fn",
     "DQCoupling", "OptResult", "PlacementProblem", "exhaustive_search",
     "greedy_transfer", "projected_gradient", "random_search",
     "scenario_robust_search", "simulated_annealing", "random_placement",

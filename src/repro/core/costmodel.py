@@ -59,12 +59,24 @@ class CostConfig:
 
 
 def _com_times_x(fleet: Fleet, x_j: np.ndarray) -> np.ndarray:
-    """(Σ_v comCost_{u,v} · x_{j,v}) for every u — structured when possible."""
+    """(Σ_v comCost_{u,v} · x_{j,v}) for every u — structured when possible.
+
+    RegionFleet path: comCost_{u,v} = d_u·d_v·inter[r_u, r_v] (u ≠ v), so the
+    matvec collapses to a degrade-weighted region mass (segment sum) times
+    the (R, R) inter matrix, plus a diagonal correction to self_cost —
+    O(V + R²) instead of O(V²)."""
     if isinstance(fleet, RegionFleet):
-        mass = fleet.region_masses(x_j)  # (R,)
-        per_u = fleet.inter[fleet.region] @ mass  # (V,)
-        # u==v pairs were priced at inter[r,r]; correct them to self_cost.
-        per_u += (fleet.self_cost - np.diag(fleet.inter)[fleet.region]) * x_j
+        diag_r = np.diag(fleet.inter)[fleet.region]
+        if fleet.degrade is None:  # healthy fleet — skip the no-op passes
+            mass = fleet.region_masses(x_j)  # (R,)
+            per_u = fleet.inter[fleet.region] @ mass  # (V,)
+            per_u += (fleet.self_cost - diag_r) * x_j
+            return per_u
+        d = fleet.degrade
+        mass = fleet.region_masses(d * x_j)  # (R,)
+        per_u = d * (fleet.inter[fleet.region] @ mass)  # (V,)
+        # u==v pairs were priced at d_u²·inter[r,r]; correct them to self_cost.
+        per_u += (fleet.self_cost - d * d * diag_r) * x_j
         return per_u
     return fleet.com_cost @ x_j
 

@@ -29,6 +29,7 @@ from repro.core.graph import OpGraph
 
 __all__ = ["SmoothConfig", "make_latency_fn", "make_objective_fn",
            "make_edge_latencies_com_fn", "make_latency_com_fn",
+           "make_edge_latencies_region_fn", "make_latency_region_fn",
            "critical_path_dp"]
 
 
@@ -77,15 +78,19 @@ def make_latency_fn(graph: OpGraph, fleet: ExplicitFleet | RegionFleet,
 
     if isinstance(fleet, RegionFleet):
         region = jnp.asarray(fleet.region)
+        d = fleet.degrade_or_ones()
         # index in numpy BEFORE tracing: a traced inter[region] gather gets
         # constant-folded per edge — minutes of XLA time at 10⁵ devices
-        inter_dev = jnp.asarray(fleet.inter[fleet.region])  # (V, R)
-        diag = jnp.asarray(np.diag(fleet.inter)[fleet.region])
-        self_cost = fleet.self_cost
+        inter_dev = jnp.asarray(fleet.inter[fleet.region] * d[:, None])  # (V, R)
+        # u==v is priced at d²·inter[r,r] by the matvec; correct to self_cost
+        corr = jnp.asarray(
+            fleet.self_cost - d * d * np.diag(fleet.inter)[fleet.region])
+        d_j = jnp.asarray(d)
 
         def com_times(x_j):
-            mass = jax.ops.segment_sum(x_j, region, num_segments=fleet.n_regions)
-            return inter_dev @ mass + (self_cost - diag) * x_j
+            mass = jax.ops.segment_sum(d_j * x_j, region,
+                                       num_segments=fleet.n_regions)
+            return inter_dev @ mass + corr * x_j
     else:
         com = jnp.asarray(fleet.com_cost)
 
@@ -194,6 +199,93 @@ def make_latency_com_fn(graph: OpGraph, cfg: SmoothConfig = SmoothConfig(),
 
     def lat(x: jnp.ndarray, com: jnp.ndarray) -> jnp.ndarray:
         return critical_path_dp(graph, elat_fn(x, com))
+
+    return lat
+
+
+# -- structured (RegionFleet) batched APIs ------------------------------------
+#
+# The dense com-traced twins above need the (V, V) matrix as an operand —
+# fine for scenario batches of modest V, hopeless at the 10⁵-device fleets
+# the paper targets.  These twins generalize the segment-sum ``com_times``
+# closure of make_latency_fn into argument-taking functions: the *region
+# assignment* is static (a what-if family shares the fleet layout) while the
+# (R, R) inter matrix and (V,) per-device degrade multipliers are traced —
+# so vmapping over (inter, degrade) pairs scores a whole RegionFleetFamily
+# without ever materializing an (S, V, V) tensor.  Per edge the math is
+#
+#   t_u = d_u · Σ_r inter[r_u, r] · mass_r  +  (self_cost − d_u²·inter[r_u,r_u])·x_{j,u}
+#   mass_r = Σ_{v ∈ region r} d_v · x_{j,v}
+#
+# i.e. O(E·(V·R + R²)) work and O(E·V) memory — linear in V.
+
+def _region_factors(inter: jnp.ndarray, degrade: jnp.ndarray,
+                    region_ix: jnp.ndarray, self_cost: float):
+    """The structured pricing rule, factored once for every consumer
+    (this module's region twin, the batched evaluator's Pallas precompute):
+
+        a[r, u]  = degrade_u · inter[region_u, r]                  (R, V)
+        corr[u]  = self_cost − degrade_u² · inter[r_u, r_u]        (V,)
+
+    so ``t = mass @ a + corr·x_j`` prices one scenario's per-device transfer
+    times.  vmap over (inter, degrade) pairs for a whole family."""
+    a = degrade[None, :] * inter.T[:, region_ix]             # (R, V)
+    corr = self_cost - degrade * degrade * jnp.diag(inter)[region_ix]
+    return a, corr
+
+
+def make_edge_latencies_region_fn(graph: OpGraph, region: np.ndarray,
+                                  n_regions: int, self_cost: float = 0.0,
+                                  cfg: SmoothConfig = SmoothConfig(),
+                                  nz_eps: float = 0.0):
+    """Returns ``elat(x, inter, degrade) -> (E,)`` — the structured twin of
+    :func:`make_edge_latencies_com_fn`.
+
+    ``region``/``n_regions``/``self_cost`` are static family structure;
+    ``inter`` (R, R) and ``degrade`` (V,) are traced per-scenario state.
+    Hard-max only; matches the numpy oracle on the equivalent RegionFleet.
+    """
+    src, dst, sel = _edge_arrays(graph)
+    src_j = jnp.asarray(src)
+    dst_j = jnp.asarray(dst)
+    sel_j = jnp.asarray(sel)
+    region_ix = jnp.asarray(np.asarray(region, dtype=np.int64))
+    alpha = cfg.alpha
+    n_edges = graph.n_edges
+
+    def elat(x: jnp.ndarray, inter: jnp.ndarray,
+             degrade: jnp.ndarray) -> jnp.ndarray:
+        x_i = x[src_j] * sel_j[:, None]                  # (E, V)
+        x_j = x[dst_j]                                   # (E, V)
+        dj = degrade[None, :] * x_j                      # (E, V)
+        mass = jnp.zeros((n_edges, n_regions), x.dtype)  # (E, R)
+        mass = mass.at[:, region_ix].add(dj)             # segment sum over V
+        a, corr = _region_factors(inter, degrade, region_ix, self_cost)
+        t = mass @ a.astype(x.dtype) + corr.astype(x.dtype)[None, :] * x_j
+        out = jnp.max(x_i * t, axis=1)                   # (E,)
+        if alpha:
+            nz = (x > nz_eps).astype(x.dtype)
+            counts = nz.sum(axis=1)
+            both = (nz[src_j] * nz[dst_j]).sum(axis=1)
+            out = out + alpha * (counts[src_j] * counts[dst_j] - both)
+        return out
+
+    return elat
+
+
+def make_latency_region_fn(graph: OpGraph, region: np.ndarray,
+                           n_regions: int, self_cost: float = 0.0,
+                           cfg: SmoothConfig = SmoothConfig(),
+                           nz_eps: float = 0.0):
+    """Returns ``lat(x, inter, degrade) -> scalar``: critical-path DP over
+    the structured edge latencies (vmap/jit twin of costmodel.latency on a
+    RegionFleet, with the per-scenario state traced)."""
+    elat_fn = make_edge_latencies_region_fn(graph, region, n_regions,
+                                            self_cost, cfg, nz_eps)
+
+    def lat(x: jnp.ndarray, inter: jnp.ndarray,
+            degrade: jnp.ndarray) -> jnp.ndarray:
+        return critical_path_dp(graph, elat_fn(x, inter, degrade))
 
     return lat
 

@@ -27,7 +27,7 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.compat import tpu_compiler_params
 
-__all__ = ["edge_latency_pallas"]
+__all__ = ["edge_latency_pallas", "edge_latency_structured_pallas"]
 
 
 def _edge_latency_kernel(xi_ref, xj_ref, com_ref, o_ref):
@@ -78,4 +78,80 @@ def edge_latency_pallas(x_i, x_j, com, block_edges: int = 128,
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x_i, x_j, com)
+    return out[:, :E]
+
+
+# -- structured (RegionFleet) variant -----------------------------------------
+#
+# At 10⁵ devices the (V, V) com matrix no longer exists; the structured path
+# factors the per-edge matvec through region space:
+#
+#   t[e, u] = Σ_r A[r, u] · mass[e, r]  +  corr[u] · x_j[e, u]
+#   A[r, u] = degrade_u · inter[region_u, r]          (R, V), per scenario
+#   mass[e, r] = Σ_{v ∈ region r} degrade_v · x_j[e, v]   (E, R), XLA scatter
+#
+# so the kernel's inner product is (be, R) @ (R, V) — R ≪ V — and the only
+# V-sized operands are the same (E, V) endpoint rows the dense kernel already
+# streams.  The caller precomputes ``mass``/``A``/``corr`` (cheap XLA
+# gathers/scatters, no V² anywhere) and the kernel fuses the small matmul,
+# the diagonal correction, and the row-max in one VMEM-resident pass.
+
+
+def _edge_latency_structured_kernel(xi_ref, xj_ref, mass_ref, a_ref, corr_ref,
+                                    o_ref):
+    xi = xi_ref[0].astype(jnp.float32)      # (be, V) — pre-scaled by s_i
+    xj = xj_ref[0].astype(jnp.float32)      # (be, V)
+    mass = mass_ref[0].astype(jnp.float32)  # (be, R)
+    a = a_ref[0].astype(jnp.float32)        # (R, V)
+    corr = corr_ref[0].astype(jnp.float32)  # (1, V)
+    t = jax.lax.dot_general(mass, a, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    o_ref[0] = jnp.max(xi * (t + corr * xj), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_edges", "interpret"))
+def edge_latency_structured_pallas(x_i, x_j, mass, a, corr,
+                                   block_edges: int = 128,
+                                   interpret: bool = False):
+    """x_i, x_j: (B, E, V); mass: (B, E, R); a: (Bc, R, V); corr: (Bc, 1, V)
+    with Bc ∈ {1, B} → (B, E) latencies ``max_u x_i·(mass @ a + corr·x_j)``.
+
+    A singleton scenario batch (Bc == 1) is shared across all B placement
+    rows via the index map, mirroring the dense kernel's shared-com path."""
+    B, E, V = x_i.shape
+    R = mass.shape[-1]
+    if E == 0:
+        return jnp.zeros((B, 0), jnp.float32)
+    if a.shape[0] not in (1, B) or corr.shape[0] != a.shape[0]:
+        raise ValueError(
+            f"scenario batch dims {a.shape[0]}/{corr.shape[0]} must match "
+            f"and be 1 or {B}")
+    shared = a.shape[0] == 1
+    be = min(block_edges, E)
+    pad = (-E) % be
+    if pad:
+        zeros = jnp.zeros((B, pad, V), x_i.dtype)
+        x_i = jnp.concatenate([x_i, zeros], axis=1)
+        x_j = jnp.concatenate([x_j, zeros.astype(x_j.dtype)], axis=1)
+        mass = jnp.concatenate(
+            [mass, jnp.zeros((B, pad, R), mass.dtype)], axis=1)
+    n_blocks = x_i.shape[1] // be
+    scen_index = (lambda b, e: (0, 0, 0)) if shared \
+        else (lambda b, e: (b, 0, 0))
+    out = pl.pallas_call(
+        _edge_latency_structured_kernel,
+        grid=(B, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, be, V), lambda b, e: (b, e, 0)),
+            pl.BlockSpec((1, be, V), lambda b, e: (b, e, 0)),
+            pl.BlockSpec((1, be, R), lambda b, e: (b, e, 0)),
+            pl.BlockSpec((1, R, V), scen_index),
+            pl.BlockSpec((1, 1, V), scen_index),
+        ],
+        out_specs=pl.BlockSpec((1, be), lambda b, e: (b, e)),
+        out_shape=jax.ShapeDtypeStruct((B, x_i.shape[1]), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x_i, x_j, mass, a, corr)
     return out[:, :E]

@@ -9,12 +9,14 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels.edge_latency import edge_latency_pallas
+from repro.kernels.edge_latency import (edge_latency_pallas,
+                                        edge_latency_structured_pallas)
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
-__all__ = ["flash_attention", "ssd_scan", "rmsnorm", "edge_latency_max"]
+__all__ = ["flash_attention", "ssd_scan", "rmsnorm", "edge_latency_max",
+           "edge_latency_structured_max"]
 
 
 def flash_attention(q, k, v, causal: bool = True, interpret: bool = False,
@@ -47,6 +49,16 @@ def edge_latency_max(x_i, x_j, com, interpret: bool = False,
     prime E still runs one full tile instead of E degenerate ones."""
     return edge_latency_pallas(x_i, x_j, com, block_edges=block_edges,
                                interpret=interpret)
+
+
+def edge_latency_structured_max(x_i, x_j, mass, a, corr,
+                                interpret: bool = False,
+                                block_edges: int = 128):
+    """(B, E) structured edge-latency max over precomputed region masses —
+    the RegionFleetFamily hot path (see kernels/edge_latency.py)."""
+    return edge_latency_structured_pallas(x_i, x_j, mass, a, corr,
+                                          block_edges=block_edges,
+                                          interpret=interpret)
 
 
 def _largest_divisor_block(n: int, target: int) -> int:

@@ -1,20 +1,23 @@
-"""Scenario simulation: generated what-if families, batched evaluation,
-trace replay (see sim/README.md for the generators → batched eval → replay
-pipeline)."""
+"""Scenario simulation: generated what-if families, batched evaluation
+(dense or structured RegionFleetFamily), trace replay (see sim/README.md for
+the generators → batched eval → replay pipeline)."""
 
-from repro.sim.batched import BatchedEvaluator, pack_fleets, pack_placements
+from repro.sim.batched import (BatchedEvaluator, pack_fleets, pack_placements,
+                               pack_region_fleets)
 from repro.sim.replay import (ReplayReport, ReplayStep, replay_trace,
                               robust_placement, scenario_robust_search)
-from repro.sim.scenarios import (Scenario, ScenarioConfig, TraceEvent,
-                                 diurnal_rate, perturbed_fleet, random_fleet,
-                                 random_graph, random_scenario, random_trace,
-                                 scenario_batch)
+from repro.sim.scenarios import (MIN_ALIVE_DEVICES, Scenario, ScenarioConfig,
+                                 TraceEvent, diurnal_rate, perturbed_fleet,
+                                 random_fleet, random_graph, random_scenario,
+                                 random_trace, region_fleet_family,
+                                 region_scenario_batch, scenario_batch)
 
 __all__ = [
-    "BatchedEvaluator", "pack_fleets", "pack_placements",
+    "BatchedEvaluator", "pack_fleets", "pack_placements", "pack_region_fleets",
     "ReplayReport", "ReplayStep", "replay_trace", "robust_placement",
     "scenario_robust_search",
-    "Scenario", "ScenarioConfig", "TraceEvent", "diurnal_rate",
-    "perturbed_fleet", "random_fleet", "random_graph", "random_scenario",
-    "random_trace", "scenario_batch",
+    "MIN_ALIVE_DEVICES", "Scenario", "ScenarioConfig", "TraceEvent",
+    "diurnal_rate", "perturbed_fleet", "random_fleet", "random_graph",
+    "random_scenario", "random_trace", "region_fleet_family",
+    "region_scenario_batch", "scenario_batch",
 ]

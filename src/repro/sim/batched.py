@@ -3,20 +3,32 @@ device dispatch.
 
 The scalar path (repro.core.costmodel) walks edges in Python — fine for one
 placement on one fleet, hopeless for scoring thousands of candidates over a
-scenario family.  This module is the vectorized twin:
+scenario family.  This module is the vectorized twin, with TWO scenario
+representations behind one API:
 
-  * the communication matrix is an *argument* (one per scenario), so a
-    single jitted function evaluates every (fleet, placement) pair of a
-    grid — no retracing, no Python per edge;
-  * edge latencies are computed for all edges at once (gather endpoint
-    rows → one batched matvec → row-max); on the hot path that reduction
-    runs in the Pallas kernel ``repro.kernels.edge_latency``;
-  * the critical-path DP is unrolled over the static topo order with (B,)
-    vector states, so it vectorizes over the whole batch for free.
+  * **dense** — the communication matrix is an *argument* (one (V, V) per
+    scenario), so a single jitted function evaluates every
+    (fleet, placement) pair of a grid; on the hot path the bilinear-max runs
+    in the Pallas kernel ``repro.kernels.edge_latency``.  Memory is
+    O(S·V²) — fine to a few thousand devices.
+  * **structured** — a :class:`repro.core.devices.RegionFleetFamily`
+    (shared region layout, (S, R, R) inter matrices, (S, V) degrade
+    multipliers) is scored via the segment-sum formulation
+    (``make_edge_latencies_region_fn``): O(S·(R² + V)) scenario state and
+    O(P·E·V) working set, never an (S, V, V) tensor — what-if grids reach
+    the 10⁵-device fleets the scalar ``make_latency_fn`` already prices.
+
+``BatchedEvaluator`` dispatches on the type of the ``com`` argument:
+a stacked array (from :func:`pack_fleets`) takes the dense path, a
+``RegionFleetFamily`` (from :func:`pack_region_fleets`) the structured one —
+same ``edge_latencies`` / ``latency`` / ``objective`` / ``score_grid``
+surface either way.  The critical-path DP is shared: it unrolls over the
+static topo order with (B,) vector states, so it vectorizes over the whole
+batch for free.
 
 The float64 numpy oracle stays the correctness reference: property tests
 assert agreement to ≤1e-5 relative on random graphs/fleets/placements,
-including RegionFleet and ``alpha > 0`` enabledLinks cases.
+including RegionFleet(Family) and ``alpha > 0`` enabledLinks cases.
 """
 
 from __future__ import annotations
@@ -28,25 +40,45 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.costmodel import CostConfig
-from repro.core.devices import ExplicitFleet, RegionFleet
+from repro.core.devices import ExplicitFleet, RegionFleet, RegionFleetFamily
 from repro.core.graph import OpGraph
-from repro.core.jaxmodel import (SmoothConfig, _edge_arrays, critical_path_dp,
-                                 make_edge_latencies_com_fn)
+from repro.core.jaxmodel import (SmoothConfig, _edge_arrays, _region_factors,
+                                 critical_path_dp,
+                                 make_edge_latencies_com_fn,
+                                 make_edge_latencies_region_fn)
 
-__all__ = ["BatchedEvaluator", "pack_fleets", "pack_placements"]
+__all__ = ["BatchedEvaluator", "pack_fleets", "pack_placements",
+           "pack_region_fleets"]
 
 Fleet = ExplicitFleet | RegionFleet
 
 
 def pack_fleets(fleets: list[Fleet], dtype=jnp.float32) -> jnp.ndarray:
-    """(S, V, V) stacked com matrices (RegionFleets are materialized —
-    scenario batches hold modest V; the structured 10⁵-device path stays on
-    make_latency_fn)."""
+    """(S, V, V) stacked com matrices — the DENSE scenario pack.
+
+    Any fleet (RegionFleets included) is materialized, so this caps out at a
+    few thousand devices; families of RegionFleets sharing a region layout
+    should use :func:`pack_region_fleets` instead, which keeps the O(R² + V)
+    structure all the way through ``score_grid``.
+    """
     mats = [np.asarray(f.com_matrix(), dtype=np.float64) for f in fleets]
     shapes = {m.shape for m in mats}
     if len(shapes) != 1:
         raise ValueError(f"fleets disagree on device count: {sorted(shapes)}")
     return jnp.asarray(np.stack(mats), dtype=dtype)
+
+
+def pack_region_fleets(fleets: list[RegionFleet]) -> RegionFleetFamily:
+    """Pack RegionFleets sharing one region layout into the STRUCTURED
+    scenario representation (no (S, V, V) materialization anywhere).
+
+    Raises ValueError when the fleets don't stack structurally — fall back
+    to :func:`pack_fleets` for heterogeneous-layout families.
+    """
+    if not all(isinstance(f, RegionFleet) for f in fleets):
+        raise ValueError("pack_region_fleets needs RegionFleets; "
+                         "use pack_fleets for mixed/dense fleets")
+    return RegionFleetFamily.from_fleets(fleets)
 
 
 def pack_placements(xs: list[np.ndarray], dtype=jnp.float32) -> jnp.ndarray:
@@ -55,18 +87,32 @@ def pack_placements(xs: list[np.ndarray], dtype=jnp.float32) -> jnp.ndarray:
 
 
 @dataclasses.dataclass
+class _StructuredFns:
+    """Jitted structured-path entry points for one family layout."""
+
+    elat: callable
+    lat: callable
+    obj: callable
+    grid: callable
+
+
+@dataclasses.dataclass
 class BatchedEvaluator:
     """vmap/jit twin of edge_latencies / latency / objective_F for one graph.
 
-    Batch conventions (x and com must share the SAME leading batch size B;
-    score_grid forms the cross product itself):
-      edge_latencies(x (B,n,V), com (B,V,V)) -> (B, E)
-      latency(x, com)                        -> (B,)
-      objective(x, com, dq, beta)            -> (B,)
-      score_grid(x (P,n,V), com (S,V,V))     -> (S, P)   — ONE dispatch
+    Batch conventions (x and the scenario batch must share the SAME leading
+    batch size B, or the scenario batch is a singleton shared across B;
+    score_grid forms the cross product itself).  ``com`` is either a dense
+    (B, V, V) stack (pack_fleets) or a RegionFleetFamily (pack_region_fleets):
 
-    ``use_pallas`` routes the inner bilinear-max through the Pallas kernel
-    (``interpret=True`` executes it on CPU; flip off on real TPUs).
+      edge_latencies(x (B,n,V), com)      -> (B, E)
+      latency(x, com)                     -> (B,)
+      objective(x, com, dq, beta)         -> (B,)
+      score_grid(x (P,n,V), com [S scen]) -> (S, P)   — ONE dispatch
+
+    ``use_pallas`` routes the inner reduction through the Pallas kernels
+    (dense bilinear-max or structured region-mass matmul;
+    ``interpret=True`` executes them on CPU, flip off on real TPUs).
     """
 
     graph: OpGraph
@@ -92,8 +138,11 @@ class BatchedEvaluator:
         self._jit_lat = jax.jit(self._lat_batched)
         self._jit_obj = jax.jit(self._obj_batched)
         self._jit_grid = jax.jit(self._grid)
+        # structured fns are built lazily per family layout (the region
+        # assignment is static structure, like the graph)
+        self._structured_cache: dict = {}
 
-    # -- core batched math (all shapes carry a leading B) --------------------
+    # -- dense batched math (all shapes carry a leading B) -------------------
     def _elat_batched(self, x: jnp.ndarray, com: jnp.ndarray) -> jnp.ndarray:
         """x (B, n, V) against com (B, V, V), or (1, V, V) = one shared
         scenario (the Pallas index map / vmap in_axes share it without
@@ -107,13 +156,17 @@ class BatchedEvaluator:
         x_j = x[:, self._dst]                              # (B, E, V)
         from repro.kernels.ops import edge_latency_max
         out = edge_latency_max(x_i, x_j, com, interpret=self.interpret)
-        if self.cfg.alpha:
-            nz = (x > self.cfg.nz_eps).astype(out.dtype)
-            counts = nz.sum(axis=-1)                       # (B, n_ops)
-            both = (nz[:, self._src] * nz[:, self._dst]).sum(axis=-1)
-            links = counts[:, self._src] * counts[:, self._dst] - both
-            out = out + self.cfg.alpha * links
-        return out
+        return out + self._links_term(x, out.dtype)
+
+    def _links_term(self, x: jnp.ndarray, dtype) -> jnp.ndarray:
+        """α·enabledLinks per edge, (B, E) — zero when alpha is off."""
+        if not self.cfg.alpha:
+            return jnp.zeros((), dtype)
+        nz = (x > self.cfg.nz_eps).astype(dtype)
+        counts = nz.sum(axis=-1)                           # (B, n_ops)
+        both = (nz[:, self._src] * nz[:, self._dst]).sum(axis=-1)
+        links = counts[:, self._src] * counts[:, self._dst] - both
+        return self.cfg.alpha * links
 
     def _lat_batched(self, x: jnp.ndarray, com: jnp.ndarray) -> jnp.ndarray:
         return critical_path_dp(self.graph, self._elat_batched(x, com))
@@ -127,29 +180,115 @@ class BatchedEvaluator:
         # scenarios, each scoring all P placements against one shared com
         # (at the ROADMAP's V=4096 targets a replicated com tensor would be
         # tens of GB).  lax.map keeps one trace; P stays the wide batch dim.
-        S = coms.shape[0]
         lat = jax.lax.map(
             lambda com: self._lat_batched(placements, com[None]), coms)
+        return self._finish_grid(lat, coms.shape[0], dq, beta)
+
+    @staticmethod
+    def _finish_grid(lat: jnp.ndarray, S: int, dq, beta) -> jnp.ndarray:
+        """(S, P) latencies → objectives; dq scalar or per-scenario (S,)."""
         dq = jnp.broadcast_to(jnp.asarray(dq, lat.dtype), (S,))
         return lat / (1.0 + beta * dq[:, None])
+
+    # -- structured batched math (RegionFleetFamily scenarios) ---------------
+    def _structured(self, fam: RegionFleetFamily) -> _StructuredFns:
+        key = (fam.region.tobytes(), fam.n_regions, float(fam.self_cost))
+        fns = self._structured_cache.get(key)
+        if fns is None:
+            fns = self._build_structured(fam.region, fam.n_regions,
+                                         fam.self_cost)
+            self._structured_cache[key] = fns
+        return fns
+
+    def _build_structured(self, region: np.ndarray, n_regions: int,
+                          self_cost: float) -> _StructuredFns:
+        elat_single = make_edge_latencies_region_fn(
+            self.graph, region, n_regions, self_cost,
+            SmoothConfig(alpha=self.cfg.alpha), nz_eps=self.cfg.nz_eps)
+        region_ix = jnp.asarray(np.asarray(region, dtype=np.int64))
+
+        def elat_b(x, inter, degrade):
+            """x (B, n, V); inter (Sb, R, R), degrade (Sb, V), Sb ∈ {1, B}."""
+            if not self.use_pallas:
+                if inter.shape[0] == 1 and x.shape[0] != 1:
+                    return jax.vmap(elat_single, in_axes=(0, None, None))(
+                        x, inter[0], degrade[0])           # (B, E)
+                return jax.vmap(elat_single)(x, inter, degrade)
+            # Pallas route: precompute the region-space factors (XLA
+            # gathers/scatters, all O(V·R) or smaller), fuse the rest;
+            # the pricing rule itself lives in jaxmodel._region_factors,
+            # shared with the vmap route's elat twin
+            x_i = x[:, self._src] * self._sel[None, :, None]   # (B, E, V)
+            x_j = x[:, self._dst]                              # (B, E, V)
+            dj = degrade[:, None, :] * x_j                     # (B, E, V)
+            B, E, V = x_i.shape
+            mass = jnp.zeros((B, E, n_regions), x.dtype)
+            mass = mass.at[:, :, region_ix].add(dj)            # (B, E, R)
+            a, corr = jax.vmap(
+                lambda i, d: _region_factors(i, d, region_ix, self_cost)
+            )(inter, degrade)                        # (Sb, R, V), (Sb, V)
+            from repro.kernels.ops import edge_latency_structured_max
+            out = edge_latency_structured_max(
+                x_i.astype(jnp.float32), x_j.astype(jnp.float32),
+                mass.astype(jnp.float32), a.astype(jnp.float32),
+                corr[:, None, :].astype(jnp.float32),
+                interpret=self.interpret)
+            return out + self._links_term(x, out.dtype)
+
+        def lat_b(x, inter, degrade):
+            return critical_path_dp(self.graph, elat_b(x, inter, degrade))
+
+        def obj_b(x, inter, degrade, dq, beta):
+            return lat_b(x, inter, degrade) / (1.0 + beta * dq)
+
+        def grid(placements, inters, degrades, dq, beta):
+            # same no-replication cross product as the dense path: scenarios
+            # stream through lax.map carrying only (R, R) + (V,) state each
+            lat = jax.lax.map(
+                lambda sc: lat_b(placements, sc[0][None], sc[1][None]),
+                (inters, degrades))
+            return self._finish_grid(lat, inters.shape[0], dq, beta)
+
+        return _StructuredFns(elat=jax.jit(elat_b), lat=jax.jit(lat_b),
+                              obj=jax.jit(obj_b), grid=jax.jit(grid))
+
+    @staticmethod
+    def _family_args(fam: RegionFleetFamily) -> tuple[jnp.ndarray, jnp.ndarray]:
+        return (jnp.asarray(fam.inter, jnp.float32),
+                jnp.asarray(fam.degrade, jnp.float32))
 
     # -- public API ----------------------------------------------------------
     def edge_latencies(self, x, com) -> jnp.ndarray:
         """(B, E) edge latencies — batched edge_latencies()."""
+        if isinstance(com, RegionFleetFamily):
+            return self._structured(com).elat(jnp.asarray(x),
+                                              *self._family_args(com))
         return self._jit_elat(jnp.asarray(x), jnp.asarray(com))
 
     def latency(self, x, com) -> jnp.ndarray:
         """(B,) critical-path latencies — batched latency()."""
+        if isinstance(com, RegionFleetFamily):
+            return self._structured(com).lat(jnp.asarray(x),
+                                             *self._family_args(com))
         return self._jit_lat(jnp.asarray(x), jnp.asarray(com))
 
     def objective(self, x, com, dq=0.0, beta: float = 0.0) -> jnp.ndarray:
         """(B,) paper eq. (8) objectives — batched objective_F()."""
+        if isinstance(com, RegionFleetFamily):
+            return self._structured(com).obj(
+                jnp.asarray(x), *self._family_args(com),
+                jnp.asarray(dq, jnp.float32), float(beta))
         return self._jit_obj(jnp.asarray(x), jnp.asarray(com),
                              jnp.asarray(dq, jnp.float32), float(beta))
 
     def score_grid(self, placements, coms, dq=0.0,
                    beta: float = 0.0) -> jnp.ndarray:
         """(S, P) objective grid — every (scenario, placement) pair in one
-        jitted dispatch.  ``dq`` may be scalar or per-scenario (S,)."""
+        jitted dispatch.  ``coms`` is a dense (S, V, V) stack or a
+        RegionFleetFamily; ``dq`` may be scalar or per-scenario (S,)."""
+        if isinstance(coms, RegionFleetFamily):
+            return self._structured(coms).grid(
+                jnp.asarray(placements), *self._family_args(coms),
+                jnp.asarray(dq, jnp.float32), float(beta))
         return self._jit_grid(jnp.asarray(placements), jnp.asarray(coms),
                               jnp.asarray(dq, jnp.float32), float(beta))

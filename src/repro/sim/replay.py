@@ -16,14 +16,17 @@ Two instruments:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 
 from repro.core.costmodel import CostConfig, latency, objective_F
+from repro.core.devices import RegionFleet
 from repro.core.graph import OpGraph
 from repro.core.placement import random_placement, uniform_placement
-from repro.sim.batched import BatchedEvaluator, pack_fleets, pack_placements
-from repro.sim.scenarios import Scenario, TraceEvent
+from repro.sim.batched import (BatchedEvaluator, pack_fleets,
+                               pack_placements, pack_region_fleets)
+from repro.sim.scenarios import MIN_ALIVE_DEVICES, Scenario, TraceEvent
 
 __all__ = ["ReplayStep", "ReplayReport", "replay_trace", "robust_placement",
            "scenario_robust_search"]
@@ -79,7 +82,13 @@ def replay_trace(engine, trace: list[TraceEvent], rng: np.random.Generator,
     """Drive ``engine`` (repro.streaming.engine.StreamingEngine) through the
     trace.  Device ids in fleet events index the *original* fleet; removals
     shift the survivors, so ids are remapped through the engine's live
-    device count (events on already-dead devices are dropped)."""
+    device count (events on already-dead devices are dropped).
+
+    Removal floor: removals are skipped once only
+    :data:`repro.sim.scenarios.MIN_ALIVE_DEVICES` (= 2) devices remain —
+    the same invariant ``random_trace`` enforces at generation time, so
+    hand-built traces (or traces replayed against a smaller fleet) can
+    never strand the engine below 2 devices either."""
     steps: list[ReplayStep] = []
     n_deg = n_rem = 0
     alive = list(range(engine.fleet.n_devices))
@@ -99,7 +108,7 @@ def replay_trace(engine, trace: list[TraceEvent], rng: np.random.Generator,
                                    factor=ev.factor, beta=beta)
                 n_deg += 1
         elif ev.kind == "remove":
-            if ev.device in alive and len(alive) > 1:
+            if ev.device in alive and len(alive) > MIN_ALIVE_DEVICES:
                 engine.apply_event("remove", alive.index(ev.device),
                                    beta=beta)
                 alive.remove(ev.device)
@@ -110,14 +119,53 @@ def replay_trace(engine, trace: list[TraceEvent], rng: np.random.Generator,
                         n_removes=n_rem)
 
 
+# above this many bytes of stacked float64 com matrices the dense fallback
+# would OOM long before producing a useful error — refuse it instead
+_DENSE_FALLBACK_MAX_BYTES = 2 ** 31
+
+
+def _pack_scenario_fleets(scenarios: list[Scenario]):
+    """Structured pack (RegionFleetFamily) when every fleet shares one
+    region layout, dense (S, V, V) stack otherwise — the evaluator
+    dispatches on the result's type."""
+    fleets = [s.fleet for s in scenarios]
+    if all(isinstance(f, RegionFleet) for f in fleets):
+        try:
+            return pack_region_fleets(fleets)
+        except ValueError as e:
+            # heterogeneous layouts — dense is the only stack left; at the
+            # fleet sizes the structured path exists for, say so instead of
+            # dying in an (S, V, V) allocation
+            v = fleets[0].n_devices
+            dense_bytes = len(fleets) * v * v * 8
+            if dense_bytes > _DENSE_FALLBACK_MAX_BYTES:
+                raise ValueError(
+                    f"scenario fleets do not stack structurally ({e}); the "
+                    f"dense fallback would materialize ~{dense_bytes / 1e9:.1f}"
+                    f" GB of (S, V, V) com matrices — align the region "
+                    f"layouts (e.g. region_scenario_batch) to stay on the "
+                    f"structured path") from e
+            warnings.warn(
+                f"scenario fleets do not stack structurally ({e}); "
+                f"falling back to the dense (S, V, V) path", RuntimeWarning,
+                stacklevel=3)
+    return pack_fleets(fleets)
+
+
 def robust_placement(graph: OpGraph, scenarios: list[Scenario],
                      rng: np.random.Generator, n_candidates: int = 256,
                      cfg: CostConfig = CostConfig(), beta: float = 0.0,
-                     dq: float = 0.0, sparsity: float = 0.5,
+                     dq: float | np.ndarray = 0.0, sparsity: float = 0.5,
                      extra_candidates: list[np.ndarray] | None = None,
                      use_pallas: bool = False):
     """Min–max what-if selection: the placement minimizing worst-case F over
     the scenario batch.
+
+    Scenario batches of RegionFleets sharing one region layout (e.g.
+    ``region_scenario_batch``) are scored on the structured segment-sum path
+    — no (S, V, V) com stack, so the family can hold 10⁵-device fleets.
+    ``dq`` may be a scalar or per-scenario ``(S,)`` (scenario s's quality
+    knob divides its row of the grid).
 
     Returns ``(x_best, worst_F, grid)`` where grid is the full (S, P) score
     matrix (useful for regret analysis: column min vs row min)."""
@@ -133,7 +181,7 @@ def robust_placement(graph: OpGraph, scenarios: list[Scenario],
     ev = BatchedEvaluator(graph, cfg, use_pallas=use_pallas)
     grid = np.asarray(ev.score_grid(
         pack_placements(candidates),
-        pack_fleets([s.fleet for s in scenarios]),
+        _pack_scenario_fleets(scenarios),
         dq=dq, beta=beta))                     # (S, P)
     worst = grid.max(axis=0)                   # (P,) worst case per candidate
     k = int(worst.argmin())
@@ -143,16 +191,23 @@ def robust_placement(graph: OpGraph, scenarios: list[Scenario],
 def scenario_robust_search(graph: OpGraph, scenarios: list[Scenario],
                            rng: np.random.Generator, n_candidates: int = 512,
                            cost_cfg: CostConfig = CostConfig(),
-                           beta: float = 0.0, dq: float = 0.0,
+                           beta: float = 0.0,
+                           dq: float | np.ndarray = 0.0,
                            sparsity: float = 0.5, warm_start: bool = True):
     """Optimizer-grade wrapper around :func:`robust_placement`.
 
     Random candidates are scored against every scenario fleet in one
-    batched dispatch; ``warm_start`` additionally seeds per-scenario greedy
-    optima (each scenario's best placement competes for the min–max crown —
-    cheap and often the winner when one fleet dominates the worst case).
-    The returned OptResult's F/latency are for the worst-case scenario,
-    recomputed with the exact oracle on the winning placement.
+    batched dispatch (structured when the fleets share a region layout);
+    ``warm_start`` additionally seeds per-scenario greedy optima (each
+    scenario's best placement competes for the min–max crown — cheap and
+    often the winner when one fleet dominates the worst case).
+
+    ``dq`` may be a scalar or a per-scenario ``(S,)`` array (scenario s runs
+    its own quality knob).  The returned OptResult's F/latency/dq_fraction
+    are for the worst-case scenario of the winning placement, recomputed
+    with the exact oracle — and the worst case is the scenario maximizing
+    **F**, not latency: with per-scenario dq the (1 + β·dq_s) denominators
+    differ, so the largest latency need not be the binding scenario.
 
     Also reachable as ``repro.core.scenario_robust_search`` (a delegator —
     the implementation lives here so the dependency arrow stays sim → core).
@@ -160,6 +215,8 @@ def scenario_robust_search(graph: OpGraph, scenarios: list[Scenario],
     from repro.core.optimizers import (OptResult, PlacementProblem,
                                        greedy_transfer)
 
+    dq_s = np.broadcast_to(np.asarray(dq, dtype=np.float64),
+                           (len(scenarios),))
     extra = []
     if warm_start:
         for s in scenarios[: min(len(scenarios), 4)]:
@@ -167,11 +224,13 @@ def scenario_robust_search(graph: OpGraph, scenarios: list[Scenario],
             extra.append(greedy_transfer(prob, max_rounds=10).x)
     x, worst_F, grid = robust_placement(
         graph, scenarios, rng, n_candidates=n_candidates, cfg=cost_cfg,
-        beta=beta, dq=dq, sparsity=sparsity, extra_candidates=extra)
+        beta=beta, dq=dq_s, sparsity=sparsity, extra_candidates=extra)
     # worst-case scenario of the winner via the exact oracle (independent of
-    # the grid's candidate ordering); F shares the (1+β·dq) factor across
-    # scenarios, so argmax latency == argmax F
-    lat = max(latency(graph, s.fleet, x, cost_cfg) for s in scenarios)
-    return OptResult(x=x, dq_fraction=dq, F=objective_F(lat, dq, beta),
-                     latency=lat, history=[worst_F],
+    # the grid's candidate ordering), picked by F so per-scenario dq
+    # denominators participate in the max
+    lats = [latency(graph, s.fleet, x, cost_cfg) for s in scenarios]
+    fs = [objective_F(lat, float(d), beta) for lat, d in zip(lats, dq_s)]
+    k = int(np.argmax(fs))
+    return OptResult(x=x, dq_fraction=float(dq_s[k]), F=fs[k],
+                     latency=lats[k], history=[worst_F],
                      evals=int(np.asarray(grid).size))

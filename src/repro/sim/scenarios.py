@@ -25,23 +25,33 @@ import math
 
 import numpy as np
 
-from repro.core.devices import ExplicitFleet, RegionFleet
+from repro.core.devices import ExplicitFleet, RegionFleet, RegionFleetFamily
 from repro.core.graph import Operator, OpGraph, random_dag
 
 __all__ = [
+    "MIN_ALIVE_DEVICES",
     "ScenarioConfig",
     "TraceEvent",
     "Scenario",
     "random_fleet",
     "perturbed_fleet",
+    "region_fleet_family",
     "random_graph",
     "diurnal_rate",
     "random_trace",
     "random_scenario",
     "scenario_batch",
+    "region_scenario_batch",
 ]
 
 GRAPH_FAMILIES = ("chain", "diamond", "fan_out", "fan_in", "layered")
+
+# The device-removal floor shared by trace GENERATION (random_trace) and
+# trace REPLAY (repro.sim.replay.replay_trace): a removal is only allowed
+# while more than this many devices are alive, so the fleet never drops
+# below MIN_ALIVE_DEVICES — the engine always has somewhere to re-place
+# AND a second device to move load to.
+MIN_ALIVE_DEVICES = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +86,12 @@ class ScenarioConfig:
     degrade_factor: tuple[float, float] = (2.0, 8.0)
     loss_prob: float = 0.02
     explicit_fleet: bool = True  # materialize ExplicitFleet (else RegionFleet)
+    # structured (RegionFleetFamily) what-if knobs: per-scenario region-level
+    # link jitter, independent device stragglers, and whole-region outages
+    region_jitter: float = 0.3
+    straggler_prob: float = 0.05
+    outage_prob: float = 0.04
+    outage_factor: float = 1e4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,6 +166,51 @@ def perturbed_fleet(fleet, rng: np.random.Generator, jitter: float = 0.3):
                          region=getattr(fleet, "region", None))
 
 
+def region_fleet_family(rng: np.random.Generator, n_scenarios: int,
+                        cfg: ScenarioConfig = ScenarioConfig(),
+                        n_devices: int | None = None,
+                        base: RegionFleet | None = None) -> RegionFleetFamily:
+    """A structured what-if family around one base RegionFleet.
+
+    Each scenario perturbs *region-level* state only, so the family packs as
+    a :class:`RegionFleetFamily` — O(S·(R² + V)) memory, never an (S, V, V)
+    tensor, which is what lets ``score_grid`` reach 10⁵-device fleets:
+
+      * link jitter — every inter-region cost multiplied by a symmetric
+        lognormal(1, ``region_jitter``) factor (WAN weather);
+      * stragglers — each device independently degraded with probability
+        ``straggler_prob`` by a ``degrade_factor``-range multiplier;
+      * whole-region outages — with probability ``outage_prob`` per region,
+        every link touching that region's devices gets ``outage_factor``×
+        slower (a soft outage: the optimizer routes around it).  At least
+        one region is always kept healthy.
+    """
+    if base is None:
+        base = random_fleet(rng, dataclasses.replace(cfg, explicit_fleet=False),
+                            n_devices=n_devices)
+    if not isinstance(base, RegionFleet):
+        raise ValueError("region_fleet_family needs a RegionFleet base")
+    v, r = base.n_devices, base.n_regions
+    base_d = base.degrade_or_ones()
+    inters = np.empty((n_scenarios, r, r))
+    degrades = np.ones((n_scenarios, v))
+    for s in range(n_scenarios):
+        noise = rng.lognormal(0.0, cfg.region_jitter, (r, r))
+        inters[s] = base.inter * (noise + noise.T) / 2.0
+        d = base_d.copy()
+        straggler = rng.random(v) < cfg.straggler_prob
+        d[straggler] *= rng.uniform(*cfg.degrade_factor, int(straggler.sum()))
+        outage = rng.random(r) < cfg.outage_prob
+        if outage.all():
+            outage[int(rng.integers(r))] = False
+        d[outage[base.region]] *= cfg.outage_factor
+        degrades[s] = d
+    return RegionFleetFamily(
+        region=base.region.copy(), inter=inters, degrade=degrades,
+        self_cost=base.self_cost,
+        speed=None if base.speed is None else base.speed.copy())
+
+
 # -- graphs -------------------------------------------------------------------
 
 def _sel(rng: np.random.Generator, cfg: ScenarioConfig) -> float:
@@ -201,8 +262,13 @@ def diurnal_rate(t: int, cfg: ScenarioConfig = ScenarioConfig(),
 
 def random_trace(rng: np.random.Generator, n_devices: int,
                  cfg: ScenarioConfig = ScenarioConfig()) -> list[TraceEvent]:
-    """A timed event sequence; at most one fleet event per tick, never
-    removing below 2 devices (the engine needs somewhere to re-place)."""
+    """A timed event sequence; at most one fleet event per tick.
+
+    Removal floor: a ``remove`` is only emitted while MORE than
+    :data:`MIN_ALIVE_DEVICES` devices are alive, so the fleet never drops
+    below ``MIN_ALIVE_DEVICES`` (= 2) — the same invariant
+    :func:`repro.sim.replay.replay_trace` enforces at replay time (a
+    regression test pins the 3-device boundary)."""
     phase = float(rng.uniform(0.0, 2.0 * math.pi))
     alive = list(range(n_devices))
     events: list[TraceEvent] = []
@@ -213,7 +279,7 @@ def random_trace(rng: np.random.Generator, n_devices: int,
             kind, rate = "burst", rate * cfg.burst_factor
         events.append(TraceEvent(t=t, kind=kind, rate=rate))
         roll = rng.random()
-        if roll < cfg.loss_prob and len(alive) > 2:
+        if roll < cfg.loss_prob and len(alive) > MIN_ALIVE_DEVICES:
             dead = alive.pop(int(rng.integers(len(alive))))
             events.append(TraceEvent(t=t, kind="remove", rate=0.0,
                                      device=dead))
@@ -252,5 +318,25 @@ def scenario_batch(rng: np.random.Generator, n_scenarios: int,
     return [
         random_scenario(rng, cfg, graph=g, n_devices=n_devices,
                         name=f"scenario{k}")
+        for k in range(n_scenarios)
+    ]
+
+
+def region_scenario_batch(rng: np.random.Generator, n_scenarios: int,
+                          cfg: ScenarioConfig = ScenarioConfig(),
+                          graph: OpGraph | None = None,
+                          n_devices: int | None = None) -> list[Scenario]:
+    """N what-if worlds whose fleets are members of ONE RegionFleetFamily
+    (shared graph, region layout, device count, and traces per scenario).
+
+    Because every fleet shares the region assignment, ``robust_placement``
+    re-packs the batch structurally (pack_region_fleets) and the score grid
+    runs the segment-sum path — no (S, V, V) com stack even at 10⁵ devices.
+    """
+    g = graph if graph is not None else random_graph(rng, cfg)
+    fam = region_fleet_family(rng, n_scenarios, cfg, n_devices=n_devices)
+    return [
+        Scenario(name=f"region_scenario{k}", graph=g, fleet=fam.fleet(k),
+                 trace=random_trace(rng, fam.n_devices, cfg))
         for k in range(n_scenarios)
     ]

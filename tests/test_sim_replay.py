@@ -4,8 +4,10 @@ min–max placement selection behaves like a min–max."""
 import numpy as np
 import pytest
 
-from repro.core import latency, scenario_robust_search, uniform_placement
+from repro.core import (latency, objective_F, scenario_robust_search,
+                        uniform_placement)
 from repro.sim import (
+    MIN_ALIVE_DEVICES,
     ScenarioConfig,
     TraceEvent,
     replay_trace,
@@ -76,6 +78,64 @@ def test_replay_rejects_unknown_event():
     with pytest.raises(ValueError):
         replay_trace(_engine(s, sg),
                      [TraceEvent(t=0, kind="comet", rate=1.0)], rng)
+
+
+def test_replay_never_removes_below_floor():
+    """Removal floor at replay time: a trace that tries to strip a 3-device
+    fleet bare only gets ONE removal through — the engine keeps
+    MIN_ALIVE_DEVICES (= 2) devices, matching random_trace's generation-time
+    invariant."""
+    rng = np.random.default_rng(5)
+    sg = _stream_graph()
+    cfg = ScenarioConfig(trace_len=4, n_regions=(2, 2),
+                         devices_per_region=(1, 2))
+    s = scenario_batch(rng, 1, cfg, n_devices=3)[0]
+    assert s.n_devices == 3
+    trace = [TraceEvent(t=t, kind="remove", rate=0.0, device=t)
+             for t in range(3)]
+    eng = _engine(s, sg)
+    rep = replay_trace(eng, trace, rng)
+    assert rep.n_removes == 1
+    assert eng.fleet.n_devices == MIN_ALIVE_DEVICES == 2
+
+
+def test_robust_search_per_scenario_dq():
+    """dq as an (S,) array: scenario s's quality knob divides its grid row,
+    and the reported worst case is the scenario maximizing F — which with
+    per-scenario dq need NOT be the max-latency scenario."""
+    rng = np.random.default_rng(6)
+    scens = scenario_batch(rng, 3, CFG)
+    g = scens[0].graph
+    beta = 4.0
+    # find the max-latency scenario for the uniform placement, then hand it
+    # a big dq so its (1 + β·dq) denominator pushes another scenario to the
+    # top of the F ranking
+    uni = uniform_placement(g.n_ops, np.ones((g.n_ops, scens[0].n_devices),
+                                             bool))
+    lats_uni = [latency(g, s.fleet, uni) for s in scens]
+    dq = np.zeros(3)
+    dq[int(np.argmax(lats_uni))] = 1.0
+    x, worst, grid = robust_placement(g, scens, rng, n_candidates=32,
+                                      dq=dq, beta=beta,
+                                      extra_candidates=[uni])
+    # grid rows carry their own denominators
+    k = int(grid.max(axis=0).argmin())
+    for si, s in enumerate(scens):
+        want = objective_F(latency(g, s.fleet, x), float(dq[si]), beta)
+        assert grid[si, k] == pytest.approx(want, rel=2e-5, abs=1e-6)
+    # search end-to-end: F / latency / dq_fraction describe the argmax-F
+    # scenario, not the argmax-latency one
+    res = scenario_robust_search(g, scens, rng, n_candidates=32, dq=dq,
+                                 beta=beta)
+    lats = [latency(g, s.fleet, res.x) for s in scens]
+    fs = [objective_F(lat, float(d), beta) for lat, d in zip(lats, dq)]
+    j = int(np.argmax(fs))
+    assert res.F == pytest.approx(fs[j], rel=1e-12)
+    assert res.latency == pytest.approx(lats[j], rel=1e-12)
+    assert res.dq_fraction == float(dq[j])
+    # the engineered case really exercises the fix: max F ≠ max latency
+    if j != int(np.argmax(lats)):
+        assert res.F < max(lats)
 
 
 def test_robust_placement_is_minmax():

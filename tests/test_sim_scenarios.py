@@ -107,6 +107,21 @@ def test_random_trace_contract():
     assert n_dev - len(removed) >= 2  # engine always has somewhere to place
 
 
+def test_random_trace_removal_floor_boundary():
+    """Regression for the generation/replay floor mismatch: a 3-device fleet
+    under certain loss (loss_prob=1) loses exactly ONE device — the trace
+    never removes below MIN_ALIVE_DEVICES (= 2), however long it runs."""
+    from repro.sim import MIN_ALIVE_DEVICES
+
+    rng = np.random.default_rng(12)
+    cfg = ScenarioConfig(trace_len=50, loss_prob=1.0, degrade_prob=0.0)
+    removes = [e for e in random_trace(rng, 3, cfg) if e.kind == "remove"]
+    assert len(removes) == 3 - MIN_ALIVE_DEVICES == 1
+    # at the floor itself nothing is ever removed
+    assert not [e for e in random_trace(rng, MIN_ALIVE_DEVICES, cfg)
+                if e.kind == "remove"]
+
+
 def test_scenario_batch_stacks():
     rng = np.random.default_rng(6)
     batch = scenario_batch(rng, 5)
