@@ -1,0 +1,200 @@
+"""Multi-objective what-if scoring: ONE score_grid dispatch returning every
+§3.1 objective grid (latency-F, both network movements, both occupancy
+reductions) vs one single-objective dispatch per objective, on both scenario
+representations.
+
+The tentpole claims this benchmark records (BENCH_objectives.json):
+
+  * the fused multi-objective dispatch is at least as fast as running the
+    same objectives as separate single-objective dispatches (they share the
+    scenario lax.map, the edge-endpoint gathers, and the dispatch overhead)
+    — the CI ``--check`` gate;
+  * the structured path scores all objectives — including the
+    degrade-weighted region-mass quadratic form of network movement — at
+    V = 131 072 without ever materializing an (S, V, V) array, far past
+    where the dense pack stops being representable.
+
+Usage:
+  python -m benchmarks.bench_objectives            # full sweep (V to 131072)
+  python -m benchmarks.bench_objectives --smoke    # tiny V (CI)
+  python -m benchmarks.bench_objectives --check    # exit 1 if the fused
+                                                   # dispatch is slower
+"""
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import ObjectiveSet, OBJECTIVES
+from repro.core.graph import linear_graph
+from repro.core.placement import random_placement
+from repro.sim import (BatchedEvaluator, ScenarioConfig, pack_fleets,
+                       pack_placements, pack_speeds, region_fleet_family)
+
+OUT_PATH = Path("BENCH_objectives.json")
+
+N_OPS = 12
+N_SCENARIOS = 4
+N_REGIONS = 8
+BYTES_F32 = 4
+
+OBJECTIVE_WEIGHTS = {"latency_f": 1.0, "network_movement": 0.001,
+                     "network_movement_cost": 0.01, "occupancy_max": 0.1,
+                     "occupancy_imbalance": 0.1}
+BETA, DQ = 0.5, 0.3
+
+# (V, n_placements): P shrinks as V grows to bound the (P, E, V) working set
+FULL_SWEEP = [(1024, 64), (16384, 32), (131072, 8)]
+SMOKE_SWEEP = [(1024, 32)]
+DENSE_MAX_V = 1024  # past this the (S, V, V) pack dwarfs memory
+
+
+def _time(f, n=5):
+    """(median seconds, last result) — median over n reps so one noisy CI
+    rep can't flip the --check gate."""
+    out = f()  # warm (jit compile)
+    times = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        out = f()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)), out
+
+
+def _instance(rng, v: int, n_placements: int):
+    cfg = ScenarioConfig(n_regions=(N_REGIONS, N_REGIONS),
+                         explicit_fleet=False, outage_prob=0.1,
+                         straggler_prob=0.05)
+    fam = region_fleet_family(rng, N_SCENARIOS, cfg, n_devices=v)
+    # payloads make every objective non-degenerate (work=0 ⇒ occupancy ≡ 0)
+    g = linear_graph([float(s) for s in rng.uniform(0.5, 1.5, N_OPS)],
+                     out_bytes=2.0, work=0.3)
+    avail = np.ones((N_OPS, v), dtype=bool)
+    xs = [random_placement(N_OPS, avail, rng, 0.5)
+          for _ in range(n_placements)]
+    return g, fam, pack_placements(xs), xs
+
+
+def _bench_path(ev, placements, pack, obj_set, speed=None):
+    """(fused_s, separate_s, fused_result): one multi-objective dispatch vs
+    one single-objective dispatch per objective."""
+    fused_s, res = _time(lambda: {
+        name: np.asarray(g) for name, g in ev.score_grid(
+            placements, pack, dq=DQ, beta=BETA, objectives=obj_set,
+            speed=speed).grids.items()})
+    separate_s = 0.0
+    for name in obj_set.names:
+        single = ObjectiveSet.of(name)
+        s, _ = _time(lambda: np.asarray(ev.score_grid(
+            placements, pack, dq=DQ, beta=BETA, objectives=single,
+            speed=speed).scalarized))
+        separate_s += s
+    return fused_s, separate_s, res
+
+
+def run(smoke: bool = False) -> list[str]:
+    rng = np.random.default_rng(0)
+    sweep = SMOKE_SWEEP if smoke else FULL_SWEEP
+    obj_set = ObjectiveSet.from_weights(**OBJECTIVE_WEIGHTS)
+    rows, out_rows = [], []
+
+    for v, n_placements in sweep:
+        g, fam, placements, xs = _instance(rng, v, n_placements)
+        n_cells = N_SCENARIOS * n_placements * len(obj_set.names)
+        ev = BatchedEvaluator(g)
+        fused_s, separate_s, grids = _bench_path(ev, placements, fam, obj_set)
+        # oracle spot-check on the smallest V (pure waste at 10⁵ devices,
+        # where the scalar oracle itself is the slow path)
+        if v == sweep[0][0]:
+            for name in obj_set.names:
+                want = OBJECTIVES[name].scalar(g, fam.fleet(0), xs[0],
+                                               DQ, BETA, ev.cfg)
+                err = abs(grids[name][0, 0] - want) / max(abs(want), 1e-12)
+                if err > 1e-4:
+                    raise AssertionError(f"{name} grid disagrees with "
+                                         f"oracle: rel {err}")
+        row = {
+            "representation": "structured",
+            "V": v, "R": N_REGIONS, "S": N_SCENARIOS, "P": n_placements,
+            "objectives": list(obj_set.names),
+            "seconds_fused": fused_s,
+            "seconds_separate_dispatches": separate_s,
+            "fused_speedup": separate_s / fused_s,
+            "objective_cells_per_second": n_cells / fused_s,
+            "scenario_state_bytes":
+                N_SCENARIOS * (N_REGIONS * N_REGIONS + v) * BYTES_F32,
+        }
+        rows.append(row)
+        out_rows.append(
+            f"structured_multi_V{v},{fused_s * 1e3:.2f}ms,"
+            f"fused_speedup={row['fused_speedup']:.2f}x")
+
+        if v <= DENSE_MAX_V:
+            fleets = fam.fleets()
+            coms, speeds = pack_fleets(fleets), pack_speeds(fleets)
+            fused_s, separate_s, _ = _bench_path(ev, placements, coms,
+                                                 obj_set, speed=speeds)
+            rows.append({
+                "representation": "dense",
+                "V": v, "S": N_SCENARIOS, "P": n_placements,
+                "objectives": list(obj_set.names),
+                "seconds_fused": fused_s,
+                "seconds_separate_dispatches": separate_s,
+                "fused_speedup": separate_s / fused_s,
+                "objective_cells_per_second": n_cells / fused_s,
+                "scenario_state_bytes": N_SCENARIOS * v * v * BYTES_F32,
+            })
+            out_rows.append(
+                f"dense_multi_V{v},{fused_s * 1e3:.2f}ms,"
+                f"fused_speedup={rows[-1]['fused_speedup']:.2f}x")
+
+    report = {
+        "n_ops": N_OPS,
+        "n_scenarios": N_SCENARIOS,
+        "n_regions": N_REGIONS,
+        "weights": OBJECTIVE_WEIGHTS,
+        "smoke": smoke,
+        "rows": rows,
+        "min_fused_speedup": min(r["fused_speedup"] for r in rows),
+        "max_structured_V": max(r["V"] for r in rows
+                                if r["representation"] == "structured"),
+    }
+    OUT_PATH.write_text(json.dumps(report, indent=2) + "\n")
+    return out_rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny V sweep for CI")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless the fused multi-objective dispatch "
+                         "is at least as fast as separate dispatches")
+    args = ap.parse_args()
+    for row in run(smoke=args.smoke):
+        print(row)
+    if args.check:
+        report = json.loads(OUT_PATH.read_text())
+        speedup = report["min_fused_speedup"]
+        # 0.8x tolerance: catch real regressions (sharing the scenario map
+        # and gathers should win outright), not CI timer noise
+        if speedup < 0.8:
+            print(f"CHECK FAILED: fused multi-objective dispatch slower "
+                  f"than separate dispatches (min speedup {speedup:.2f}x "
+                  f"< 0.8x)", file=sys.stderr)
+            sys.exit(1)
+        if not report["smoke"] and report["max_structured_V"] < 131072:
+            print(f"CHECK FAILED: structured sweep stopped at "
+                  f"V={report['max_structured_V']} < 131072",
+                  file=sys.stderr)
+            sys.exit(1)
+        print(f"check OK: min fused speedup {speedup:.2f}x, structured V "
+              f"up to {report['max_structured_V']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,7 @@ and its calibration against compiled TPU artifacts."""
 
 from repro.core.costmodel import (
     CostConfig,
+    device_occupancy,
     edge_latencies,
     edge_latency,
     enabled_links,
@@ -11,6 +12,13 @@ from repro.core.costmodel import (
     latency_via_paths,
     network_movement,
     objective_F,
+)
+from repro.core.objectives import (
+    OBJECTIVES,
+    ObjectiveGrids,
+    ObjectiveSet,
+    ObjectiveSpec,
+    as_objective_set,
 )
 from repro.core.devices import (ExplicitFleet, RegionFleet, RegionFleetFamily,
                                 fleet_from_tpu_mesh)
@@ -42,8 +50,11 @@ from repro.core.placement import (
 )
 
 __all__ = [
-    "CostConfig", "edge_latencies", "edge_latency", "enabled_links", "latency",
-    "latency_via_paths", "network_movement", "objective_F",
+    "CostConfig", "device_occupancy", "edge_latencies", "edge_latency",
+    "enabled_links", "latency", "latency_via_paths", "network_movement",
+    "objective_F",
+    "OBJECTIVES", "ObjectiveGrids", "ObjectiveSet", "ObjectiveSpec",
+    "as_objective_set",
     "ExplicitFleet", "RegionFleet", "RegionFleetFamily", "fleet_from_tpu_mesh",
     "Operator", "OpGraph", "diamond_graph", "linear_graph", "random_dag",
     "SmoothConfig", "make_latency_fn", "make_objective_fn",

@@ -81,6 +81,16 @@ def _com_times_x(fleet: Fleet, x_j: np.ndarray) -> np.ndarray:
     return fleet.com_cost @ x_j
 
 
+def _effective_speed(fleet: Fleet, n_dev: int) -> np.ndarray:
+    """(V,) compute speed with degrade applied — shared by the occupancy
+    objective and the compute-cost extension so a straggler is priced slow
+    on compute exactly as its links are priced slow (fleet.effective_speed,
+    falling back to ones for speed-less fleets)."""
+    if fleet.speed is None:
+        return np.ones(n_dev)
+    return fleet.effective_speed()
+
+
 def enabled_links(x_i: np.ndarray, x_j: np.ndarray, nz_eps: float = 0.0) -> float:
     """#{(u,v): x_{i,u}≠0, x_{j,v}≠0, u≠v} — devices exchanging data over the net."""
     nz_i = x_i > nz_eps
@@ -123,8 +133,7 @@ def node_compute_cost(graph: OpGraph, fleet: Fleet, x: np.ndarray, i: int) -> fl
     if op.work == 0.0:
         return 0.0
     rate = graph.cumulative_rates()[i]
-    speed = fleet.speed if fleet.speed is not None else np.ones(x.shape[1])
-    t = op.work * rate * x[i] / speed
+    t = op.work * rate * x[i] / _effective_speed(fleet, x.shape[1])
     return float(t.max())
 
 
@@ -178,27 +187,43 @@ def objective_F(latency_value: float, dq_fraction: float, beta: float) -> float:
 def network_movement(graph: OpGraph, fleet: Fleet, x: np.ndarray,
                      weight_by_cost: bool = False) -> float:
     """Total data moved over the network (as in [26]): Σ_edges Σ_{u≠v}
-    rate_i·s_i·bytes_i·x_{i,u}·x_{j,v}, optionally weighted by comCost."""
+    rate_i·s_i·bytes_i·x_{i,u}·x_{j,v}, optionally weighted by comCost.
+
+    The bilinear sum factorizes — unweighted it is
+    ``(Σ_u x_{i,u})·(Σ_v x_{j,v}) − Σ_u x_{i,u}·x_{j,u}`` (O(V) per edge);
+    weighted it routes through :func:`_com_times_x`, so RegionFleets take
+    the degrade-weighted segment-sum path (O(V + R²) per edge) and never
+    materialize ``com_matrix()``.  The u == v diagonal (data staying local)
+    is subtracted explicitly in both forms.
+    """
     x = np.asarray(x, dtype=np.float64)
     rates = graph.cumulative_rates()
-    com = fleet.com_matrix() if weight_by_cost else None
+    if weight_by_cost:
+        # per-device self-transfer price: what _com_times_x puts on u == v
+        diag = fleet.self_cost if isinstance(fleet, RegionFleet) \
+            else np.diag(fleet.com_cost)
     total = 0.0
     for i, j in graph.edges:
         op = graph.operators[i]
-        outer = np.outer(x[i], x[j])
-        np.fill_diagonal(outer, 0.0)  # u == v stays local
         if weight_by_cost:
-            outer = outer * com
-        total += rates[i] * op.selectivity * op.out_bytes * outer.sum()
+            pair = x[i] @ _com_times_x(fleet, x[j]) \
+                - float(np.sum(x[i] * diag * x[j]))
+        else:
+            pair = float(x[i].sum() * x[j].sum() - np.sum(x[i] * x[j]))
+        total += rates[i] * op.selectivity * op.out_bytes * pair
     return float(total)
 
 
 def device_occupancy(graph: OpGraph, fleet: Fleet, x: np.ndarray) -> np.ndarray:
     """(V,) total processing time each device is occupied for one unit batch
-    per source (§3.1: "total time resources are occupied")."""
+    per source (§3.1: "total time resources are occupied").
+
+    Speeds are *effective* speeds: a RegionFleet device with a ``degrade``
+    multiplier occupies proportionally longer — the compute-side twin of how
+    its links are priced ``degrade``× slower."""
     x = np.asarray(x, dtype=np.float64)
     rates = graph.cumulative_rates()
-    speed = fleet.speed if fleet.speed is not None else np.ones(x.shape[1])
+    speed = _effective_speed(fleet, x.shape[1])
     occ = np.zeros(x.shape[1])
     for i, op in enumerate(graph.operators):
         occ += op.work * rates[i] * x[i] / speed

@@ -85,6 +85,13 @@ class ExplicitFleet:
     def com_matrix(self) -> np.ndarray:
         return self.com_cost
 
+    def effective_speed(self) -> np.ndarray:
+        """(V,) compute speed as priced by the occupancy / compute objectives.
+
+        An ExplicitFleet has no separate degrade state — stragglers are
+        folded directly into ``speed`` (see :meth:`degrade_device`)."""
+        return self.speed
+
     def degrade_device(self, u: int, factor: float) -> "ExplicitFleet":
         """Model a straggler: all links touching ``u`` get ``factor``× slower
         and its compute speed drops by the same factor (runtime mitigation
@@ -166,6 +173,15 @@ class RegionFleet:
             return np.ones(self.n_devices, dtype=np.float64)
         return self.degrade
 
+    def effective_speed(self) -> np.ndarray:
+        """(V,) compute speed with the degrade multiplier applied.
+
+        ``degrade_u`` prices every link touching ``u`` as ``degrade_u``×
+        slower; a straggling box is slow on compute too, so the occupancy /
+        compute objectives divide its nominal speed by the same multiplier
+        (a degrade-2 device occupies 2× longer for the same work)."""
+        return self.speed / self.degrade_or_ones()
+
     def com_matrix(self) -> np.ndarray:
         """Materialize the dense matrix (tests / small fleets only)."""
         c = self.inter[np.ix_(self.region, self.region)].copy()
@@ -181,14 +197,15 @@ class RegionFleet:
         return r
 
     def degrade_device(self, u: int, factor: float) -> "RegionFleet":
-        """Structured straggler: links touching ``u`` get ``factor``× slower,
-        its compute speed drops by the same factor (mirrors
-        ExplicitFleet.degrade_device without materializing the matrix)."""
+        """Structured straggler: links touching ``u`` get ``factor``× slower
+        and, through :meth:`effective_speed`, its compute slows by the same
+        factor (mirrors ExplicitFleet.degrade_device without materializing
+        the matrix).  The slowdown lives ONLY in ``degrade`` — ``speed``
+        stays nominal, so families built from degraded fleets keep one
+        shared speed vector and the multiplier is never double-counted."""
         d = self.degrade_or_ones().copy()
         d[u] *= factor
-        s = self.speed.copy()
-        s[u] /= factor
-        return dataclasses.replace(self, degrade=d, speed=s)
+        return dataclasses.replace(self, degrade=d)
 
 
 @dataclasses.dataclass
@@ -288,6 +305,18 @@ class RegionFleetFamily:
             self_cost=first.self_cost,
             speed=speed,
         )
+
+    def speed_or_ones(self) -> np.ndarray:
+        """(S, V) nominal speeds, scenario-broadcast when shared."""
+        if self.speed is None:
+            return np.ones((self.n_scenarios, self.n_devices))
+        return np.broadcast_to(self.speed,
+                               (self.n_scenarios, self.n_devices))
+
+    def effective_speeds(self) -> np.ndarray:
+        """(S, V) per-scenario compute speeds with degrade applied —
+        the stacked twin of :meth:`RegionFleet.effective_speed`."""
+        return self.speed_or_ones() / self.degrade
 
     def fleet(self, s: int) -> "RegionFleet":
         """Scenario ``s`` as a standalone RegionFleet (oracle / replay use)."""

@@ -32,6 +32,7 @@ from repro.core.costmodel import CostConfig, latency, objective_F
 from repro.core.devices import ExplicitFleet, RegionFleet
 from repro.core.graph import OpGraph
 from repro.core.jaxmodel import SmoothConfig, make_latency_fn
+from repro.core.objectives import ObjectiveSet
 from repro.core.placement import random_placement, uniform_placement
 
 __all__ = [
@@ -67,11 +68,19 @@ class DQCoupling:
 
 @dataclasses.dataclass(frozen=True)
 class PlacementProblem:
+    """One placement instance.  ``objectives=None`` scores paper eq. (8)'s F
+    alone; an :class:`repro.core.objectives.ObjectiveSet` makes ``score``
+    the weighted multi-objective scalarization through the exact oracles —
+    every discrete optimizer below then minimizes it unchanged (the
+    projected-gradient path still descends the smoothed-latency surrogate
+    and only *snaps* with the full scalarized score)."""
+
     graph: OpGraph
     fleet: Fleet
     cost_cfg: CostConfig = CostConfig()
     beta: float = 0.0
     dq: DQCoupling | None = None
+    objectives: ObjectiveSet | None = None
 
     def availability(self) -> np.ndarray:
         return self.fleet.availability(self.graph.n_ops)
@@ -82,9 +91,12 @@ class PlacementProblem:
         return bool((x.sum(axis=0) <= self.dq.caps(dq) + atol).all())
 
     def score(self, x: np.ndarray, dq: float = 0.0) -> float:
-        """Exact F (∞ if infeasible)."""
+        """Exact weighted objective (∞ if infeasible); F when single-objective."""
         if not self.feasible(x, dq):
             return math.inf
+        if self.objectives is not None:
+            return self.objectives.scalar_total(self.graph, self.fleet, x,
+                                                dq, self.beta, self.cost_cfg)
         lat = latency(self.graph, self.fleet, x, self.cost_cfg)
         return objective_F(lat, dq, self.beta)
 
@@ -101,8 +113,14 @@ class OptResult:
     @classmethod
     def of(cls, prob: PlacementProblem, x: np.ndarray, dq: float,
            history: list[float], evals: int) -> "OptResult":
+        """F is the problem's own score: paper eq. (8) single-objective, or
+        the weighted scalarization when the problem carries an ObjectiveSet
+        (latency stays the raw critical-path latency either way)."""
         lat = latency(prob.graph, prob.fleet, x, prob.cost_cfg)
-        return cls(x=x, dq_fraction=dq, F=objective_F(lat, dq, prob.beta),
+        f = objective_F(lat, dq, prob.beta) if prob.objectives is None \
+            else prob.objectives.scalar_total(prob.graph, prob.fleet, x, dq,
+                                              prob.beta, prob.cost_cfg)
+        return cls(x=x, dq_fraction=dq, F=f,
                    latency=lat, history=history, evals=evals)
 
 

@@ -3,7 +3,7 @@
 the generators → batched eval → replay pipeline)."""
 
 from repro.sim.batched import (BatchedEvaluator, pack_fleets, pack_placements,
-                               pack_region_fleets)
+                               pack_region_fleets, pack_speeds)
 from repro.sim.replay import (ReplayReport, ReplayStep, replay_trace,
                               robust_placement, scenario_robust_search)
 from repro.sim.scenarios import (MIN_ALIVE_DEVICES, Scenario, ScenarioConfig,
@@ -14,6 +14,7 @@ from repro.sim.scenarios import (MIN_ALIVE_DEVICES, Scenario, ScenarioConfig,
 
 __all__ = [
     "BatchedEvaluator", "pack_fleets", "pack_placements", "pack_region_fleets",
+    "pack_speeds",
     "ReplayReport", "ReplayStep", "replay_trace", "robust_placement",
     "scenario_robust_search",
     "MIN_ALIVE_DEVICES", "Scenario", "ScenarioConfig", "TraceEvent",

@@ -46,9 +46,11 @@ from repro.core.jaxmodel import (SmoothConfig, _edge_arrays, _region_factors,
                                  critical_path_dp,
                                  make_edge_latencies_com_fn,
                                  make_edge_latencies_region_fn)
+from repro.core.objectives import (ObjectiveGrids, ObjectiveSet,
+                                   as_objective_set)
 
 __all__ = ["BatchedEvaluator", "pack_fleets", "pack_placements",
-           "pack_region_fleets"]
+           "pack_region_fleets", "pack_speeds"]
 
 Fleet = ExplicitFleet | RegionFleet
 
@@ -86,14 +88,29 @@ def pack_placements(xs: list[np.ndarray], dtype=jnp.float32) -> jnp.ndarray:
     return jnp.asarray(np.stack([np.asarray(x) for x in xs]), dtype=dtype)
 
 
+def pack_speeds(fleets: list[Fleet], dtype=jnp.float32) -> jnp.ndarray:
+    """(S, V) stacked *effective* device speeds — the dense-path companion
+    of :func:`pack_fleets` for the occupancy objectives (the com stack
+    carries link state only; compute speed rides separately).  Structured
+    families don't need this: a RegionFleetFamily carries its own speeds."""
+    sp = [np.asarray(f.effective_speed(), dtype=np.float64) for f in fleets]
+    shapes = {s.shape for s in sp}
+    if len(shapes) != 1:
+        raise ValueError(f"fleets disagree on device count: {sorted(shapes)}")
+    return jnp.asarray(np.stack(sp), dtype=dtype)
+
+
 @dataclasses.dataclass
 class _StructuredFns:
-    """Jitted structured-path entry points for one family layout."""
+    """Jitted structured-path entry points for one family layout (lat_raw
+    is the unjitted latency fn the multi-objective grid composes into its
+    own jitted dispatch)."""
 
     elat: callable
     lat: callable
     obj: callable
     grid: callable
+    lat_raw: callable
 
 
 @dataclasses.dataclass
@@ -139,8 +156,10 @@ class BatchedEvaluator:
         self._jit_obj = jax.jit(self._obj_batched)
         self._jit_grid = jax.jit(self._grid)
         # structured fns are built lazily per family layout (the region
-        # assignment is static structure, like the graph)
+        # assignment is static structure, like the graph); multi-objective
+        # grid fns per (layout, ObjectiveSet)
         self._structured_cache: dict = {}
+        self._multi_cache: dict = {}
 
     # -- dense batched math (all shapes carry a leading B) -------------------
     def _elat_batched(self, x: jnp.ndarray, com: jnp.ndarray) -> jnp.ndarray:
@@ -191,8 +210,12 @@ class BatchedEvaluator:
         return lat / (1.0 + beta * dq[:, None])
 
     # -- structured batched math (RegionFleetFamily scenarios) ---------------
+    @staticmethod
+    def _layout_key(fam: RegionFleetFamily) -> tuple:
+        return (fam.region.tobytes(), fam.n_regions, float(fam.self_cost))
+
     def _structured(self, fam: RegionFleetFamily) -> _StructuredFns:
-        key = (fam.region.tobytes(), fam.n_regions, float(fam.self_cost))
+        key = self._layout_key(fam)
         fns = self._structured_cache.get(key)
         if fns is None:
             fns = self._build_structured(fam.region, fam.n_regions,
@@ -250,12 +273,121 @@ class BatchedEvaluator:
             return self._finish_grid(lat, inters.shape[0], dq, beta)
 
         return _StructuredFns(elat=jax.jit(elat_b), lat=jax.jit(lat_b),
-                              obj=jax.jit(obj_b), grid=jax.jit(grid))
+                              obj=jax.jit(obj_b), grid=jax.jit(grid),
+                              lat_raw=lat_b)
 
     @staticmethod
     def _family_args(fam: RegionFleetFamily) -> tuple[jnp.ndarray, jnp.ndarray]:
         return (jnp.asarray(fam.inter, jnp.float32),
                 jnp.asarray(fam.degrade, jnp.float32))
+
+    # -- multi-objective grids (ObjectiveSet, §3.1) --------------------------
+    #
+    # One jitted dispatch returns EVERY objective's (S, P) grid plus the
+    # weighted scalarization, on both scenario representations.  The
+    # scenario lax.map carries a pytree of per-objective (P,) rows, so the
+    # no-replication cross product is unchanged; dq/beta normalization
+    # (spec.finish — only latency-F uses it) and the weighted sum happen
+    # after the map, where per-scenario dq broadcasts over the grid.
+    #
+    # latency_f is carved out by name: it rides the evaluator's own edge
+    # machinery (which honors use_pallas and is already built per graph)
+    # instead of the spec's reference builders — a test pins the two routes
+    # to the same oracle so they can't drift.
+
+    def _finish_multi(self, obj_set: ObjectiveSet, raw: dict, S: int,
+                      dq, beta, weights):
+        dq_col = jnp.broadcast_to(jnp.asarray(dq, jnp.float32), (S,))[:, None]
+        grids = {s.name: s.finish(raw[s.name], dq_col, beta)
+                 for s in obj_set.specs}
+        stacked = jnp.stack([grids[n] for n in obj_set.names])  # (K, S, P)
+        return grids, jnp.einsum("k,ksp->sp", weights, stacked)
+
+    def _multi_dense(self, obj_set: ObjectiveSet):
+        fn = self._multi_cache.get(obj_set)
+        if fn is None:
+            builders = {s.name: s.build_dense(self.graph, self.cfg)
+                        for s in obj_set.specs if s.name != "latency_f"}
+            has_lat = "latency_f" in obj_set.names
+
+            def grid(placements, coms, speeds, dq, beta, weights):
+                def per_scenario(op):
+                    com, speed = op
+                    outs = {}
+                    if has_lat:
+                        # the evaluator's own edge machinery (Pallas-aware)
+                        outs["latency_f"] = self._lat_batched(
+                            placements, com[None])
+                    for name, f in builders.items():
+                        outs[name] = jax.vmap(
+                            lambda x: f(x, com, speed))(placements)
+                    return outs                       # dict of (P,)
+                raw = jax.lax.map(per_scenario, (coms, speeds))
+                return self._finish_multi(obj_set, raw, coms.shape[0],
+                                          dq, beta, weights)
+
+            fn = jax.jit(grid)
+            self._multi_cache[obj_set] = fn
+        return fn
+
+    def _multi_structured(self, fam: RegionFleetFamily,
+                          obj_set: ObjectiveSet):
+        key = (self._layout_key(fam), obj_set)
+        fn = self._multi_cache.get(key)
+        if fn is None:
+            sf = self._structured(fam)
+            builders = {s.name: s.build_structured(
+                            self.graph, fam.region, fam.n_regions,
+                            fam.self_cost, self.cfg)
+                        for s in obj_set.specs if s.name != "latency_f"}
+            has_lat = "latency_f" in obj_set.names
+
+            def grid(placements, inters, degrades, speeds, dq, beta,
+                     weights):
+                def per_scenario(sc):
+                    inter, degrade, speed = sc
+                    outs = {}
+                    if has_lat:
+                        outs["latency_f"] = sf.lat_raw(
+                            placements, inter[None], degrade[None])
+                    for name, f in builders.items():
+                        outs[name] = jax.vmap(
+                            lambda x: f(x, inter, degrade, speed))(placements)
+                    return outs
+                raw = jax.lax.map(per_scenario, (inters, degrades, speeds))
+                return self._finish_multi(obj_set, raw, inters.shape[0],
+                                          dq, beta, weights)
+
+            fn = jax.jit(grid)
+            self._multi_cache[key] = fn
+        return fn
+
+    @staticmethod
+    def _validate_dq(dq, S: int) -> jnp.ndarray:
+        """dq must be a scalar or EXACTLY (S,) — a wrong-length vector that
+        happens to broadcast (e.g. (1,) against S scenarios, or a (P,)
+        slipped in as dq) would silently mis-scale the grid."""
+        arr = np.asarray(dq, dtype=np.float64)
+        if arr.ndim != 0 and arr.shape != (S,):
+            raise ValueError(
+                f"dq must be a scalar or shape ({S},) — one entry per "
+                f"scenario; got shape {arr.shape} for S={S}")
+        return jnp.asarray(arr, jnp.float32)
+
+    def _dense_speeds(self, coms: jnp.ndarray, speed) -> jnp.ndarray:
+        """Normalize the dense path's optional speed operand to (S, V):
+        None ⇒ unit speeds (the paper-faithful 'communication dominates'
+        default), (V,) shared, or (S, V) per-scenario (pack_speeds)."""
+        S, V = coms.shape[0], coms.shape[1]
+        if speed is None:
+            return jnp.ones((S, V), jnp.float32)
+        arr = np.asarray(speed, dtype=np.float64)
+        if arr.shape == (V,):
+            arr = np.broadcast_to(arr, (S, V))
+        elif arr.shape != (S, V):
+            raise ValueError(f"speed must be (V,) or (S, V) = ({S}, {V}); "
+                             f"got shape {arr.shape}")
+        return jnp.asarray(arr, jnp.float32)
 
     # -- public API ----------------------------------------------------------
     def edge_latencies(self, x, com) -> jnp.ndarray:
@@ -281,14 +413,56 @@ class BatchedEvaluator:
         return self._jit_obj(jnp.asarray(x), jnp.asarray(com),
                              jnp.asarray(dq, jnp.float32), float(beta))
 
-    def score_grid(self, placements, coms, dq=0.0,
-                   beta: float = 0.0) -> jnp.ndarray:
-        """(S, P) objective grid — every (scenario, placement) pair in one
-        jitted dispatch.  ``coms`` is a dense (S, V, V) stack or a
-        RegionFleetFamily; ``dq`` may be scalar or per-scenario (S,)."""
-        if isinstance(coms, RegionFleetFamily):
-            return self._structured(coms).grid(
-                jnp.asarray(placements), *self._family_args(coms),
-                jnp.asarray(dq, jnp.float32), float(beta))
-        return self._jit_grid(jnp.asarray(placements), jnp.asarray(coms),
-                              jnp.asarray(dq, jnp.float32), float(beta))
+    def score_grid(self, placements, coms, dq=0.0, beta: float = 0.0,
+                   objectives: ObjectiveSet | None = None, speed=None):
+        """Score every (scenario, placement) pair in one jitted dispatch.
+
+        ``coms`` is a dense (S, V, V) stack or a RegionFleetFamily; ``dq``
+        must be a scalar or exactly per-scenario (S,).
+
+        ``objectives=None`` (default) returns the (S, P) latency-F grid —
+        the single-objective fast path.  With an :class:`ObjectiveSet` (or
+        anything ``as_objective_set`` accepts) the SAME dispatch computes
+        every objective's (S, P) grid plus the weighted scalarization,
+        returned as an :class:`ObjectiveGrids`; the structured path still
+        never materializes an (S, V, V) array.  ``speed`` feeds the
+        occupancy objectives on the dense path ((V,) or (S, V), see
+        :func:`pack_speeds`; default unit speeds); structured families
+        carry their own speeds, so ``speed`` must stay None there.
+        """
+        placements = jnp.asarray(placements)
+        structured = isinstance(coms, RegionFleetFamily)
+        if not structured:
+            coms = jnp.asarray(coms)
+        S = coms.n_scenarios if structured else coms.shape[0]
+        dq_arr = self._validate_dq(dq, S)
+        if objectives is None:
+            if speed is not None:
+                raise ValueError("speed only feeds the occupancy objectives "
+                                 "— pass objectives= to use it")
+            if structured:
+                return self._structured(coms).grid(
+                    placements, *self._family_args(coms), dq_arr,
+                    float(beta))
+            return self._jit_grid(placements, coms, dq_arr, float(beta))
+        obj_set = as_objective_set(objectives)
+        weights = jnp.asarray(obj_set.weights, jnp.float32)
+        if structured:
+            if speed is not None:
+                raise ValueError("structured families carry their own "
+                                 "speeds; leave speed=None")
+            # nominal speeds: the structured occupancy twin applies the
+            # traced degrade itself (effective = speed / degrade)
+            speeds = jnp.asarray(coms.speed_or_ones(), jnp.float32)
+            grids, scal = self._multi_structured(coms, obj_set)(
+                placements, *self._family_args(coms), speeds, dq_arr,
+                float(beta), weights)
+        else:
+            grids, scal = self._multi_dense(obj_set)(
+                placements, coms, self._dense_speeds(coms, speed), dq_arr,
+                float(beta), weights)
+        # jit returns dict pytrees in sorted-key order; present the grids
+        # in the set's declared objective order
+        return ObjectiveGrids(names=obj_set.names,
+                              grids={n: grids[n] for n in obj_set.names},
+                              scalarized=scal, weights=obj_set.weights)

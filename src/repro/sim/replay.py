@@ -21,11 +21,13 @@ import warnings
 import numpy as np
 
 from repro.core.costmodel import CostConfig, latency, objective_F
-from repro.core.devices import RegionFleet
+from repro.core.devices import RegionFleet, RegionFleetFamily
 from repro.core.graph import OpGraph
+from repro.core.objectives import ObjectiveSet, as_objective_set
 from repro.core.placement import random_placement, uniform_placement
 from repro.sim.batched import (BatchedEvaluator, pack_fleets,
-                               pack_placements, pack_region_fleets)
+                               pack_placements, pack_region_fleets,
+                               pack_speeds)
 from repro.sim.scenarios import MIN_ALIVE_DEVICES, Scenario, TraceEvent
 
 __all__ = ["ReplayStep", "ReplayReport", "replay_trace", "robust_placement",
@@ -157,9 +159,10 @@ def robust_placement(graph: OpGraph, scenarios: list[Scenario],
                      cfg: CostConfig = CostConfig(), beta: float = 0.0,
                      dq: float | np.ndarray = 0.0, sparsity: float = 0.5,
                      extra_candidates: list[np.ndarray] | None = None,
-                     use_pallas: bool = False):
-    """Min–max what-if selection: the placement minimizing worst-case F over
-    the scenario batch.
+                     use_pallas: bool = False,
+                     objectives: ObjectiveSet | None = None):
+    """Min–max what-if selection: the placement minimizing the worst-case
+    score over the scenario batch.
 
     Scenario batches of RegionFleets sharing one region layout (e.g.
     ``region_scenario_batch``) are scored on the structured segment-sum path
@@ -167,8 +170,16 @@ def robust_placement(graph: OpGraph, scenarios: list[Scenario],
     ``dq`` may be a scalar or per-scenario ``(S,)`` (scenario s's quality
     knob divides its row of the grid).
 
-    Returns ``(x_best, worst_F, grid)`` where grid is the full (S, P) score
-    matrix (useful for regret analysis: column min vs row min)."""
+    ``objectives=None`` scores F alone (paper eq. 8); an ObjectiveSet makes
+    the score the weighted §3.1 scalarization — every objective's grid and
+    the weighted sum still come from ONE dispatch, so the min–max can trade
+    worst-case F against WAN bytes moved or occupancy skew.  On the dense
+    fallback the fleets' effective speeds are packed alongside the com stack
+    so the occupancy objectives see stragglers.
+
+    Returns ``(x_best, worst_score, grid)`` where grid is the full (S, P)
+    score matrix (the weighted scalarization when multi-objective; useful
+    for regret analysis: column min vs row min)."""
     if not scenarios:
         raise ValueError("need at least one scenario")
     n_dev = scenarios[0].n_devices
@@ -179,10 +190,13 @@ def robust_placement(graph: OpGraph, scenarios: list[Scenario],
     if extra_candidates:
         candidates += [np.asarray(x) for x in extra_candidates]
     ev = BatchedEvaluator(graph, cfg, use_pallas=use_pallas)
-    grid = np.asarray(ev.score_grid(
-        pack_placements(candidates),
-        _pack_scenario_fleets(scenarios),
-        dq=dq, beta=beta))                     # (S, P)
+    pack = _pack_scenario_fleets(scenarios)
+    speed = None
+    if objectives is not None and not isinstance(pack, RegionFleetFamily):
+        speed = pack_speeds([s.fleet for s in scenarios])
+    res = ev.score_grid(pack_placements(candidates), pack,
+                        dq=dq, beta=beta, objectives=objectives, speed=speed)
+    grid = np.asarray(res if objectives is None else res.scalarized)  # (S, P)
     worst = grid.max(axis=0)                   # (P,) worst case per candidate
     k = int(worst.argmin())
     return candidates[k], float(worst[k]), grid
@@ -193,7 +207,8 @@ def scenario_robust_search(graph: OpGraph, scenarios: list[Scenario],
                            cost_cfg: CostConfig = CostConfig(),
                            beta: float = 0.0,
                            dq: float | np.ndarray = 0.0,
-                           sparsity: float = 0.5, warm_start: bool = True):
+                           sparsity: float = 0.5, warm_start: bool = True,
+                           objectives: ObjectiveSet | None = None):
     """Optimizer-grade wrapper around :func:`robust_placement`.
 
     Random candidates are scored against every scenario fleet in one
@@ -206,8 +221,15 @@ def scenario_robust_search(graph: OpGraph, scenarios: list[Scenario],
     its own quality knob).  The returned OptResult's F/latency/dq_fraction
     are for the worst-case scenario of the winning placement, recomputed
     with the exact oracle — and the worst case is the scenario maximizing
-    **F**, not latency: with per-scenario dq the (1 + β·dq_s) denominators
-    differ, so the largest latency need not be the binding scenario.
+    the score (**F**, not latency: with per-scenario dq the (1 + β·dq_s)
+    denominators differ, so the largest latency need not be the binding
+    scenario).
+
+    With an ``objectives`` ObjectiveSet the whole loop goes multi-objective:
+    warm-start greedy seeds descend the weighted scalarization, the grid is
+    the scalarized (S, P) matrix, and the reported F is the worst-case
+    scenario's scalarized score (latency stays that scenario's raw
+    critical-path latency).
 
     Also reachable as ``repro.core.scenario_robust_search`` (a delegator —
     the implementation lives here so the dependency arrow stays sim → core).
@@ -215,21 +237,29 @@ def scenario_robust_search(graph: OpGraph, scenarios: list[Scenario],
     from repro.core.optimizers import (OptResult, PlacementProblem,
                                        greedy_transfer)
 
+    obj_set = None if objectives is None else as_objective_set(objectives)
     dq_s = np.broadcast_to(np.asarray(dq, dtype=np.float64),
                            (len(scenarios),))
     extra = []
     if warm_start:
         for s in scenarios[: min(len(scenarios), 4)]:
-            prob = PlacementProblem(graph, s.fleet, cost_cfg, beta=beta)
+            prob = PlacementProblem(graph, s.fleet, cost_cfg, beta=beta,
+                                    objectives=obj_set)
             extra.append(greedy_transfer(prob, max_rounds=10).x)
     x, worst_F, grid = robust_placement(
         graph, scenarios, rng, n_candidates=n_candidates, cfg=cost_cfg,
-        beta=beta, dq=dq_s, sparsity=sparsity, extra_candidates=extra)
+        beta=beta, dq=dq_s, sparsity=sparsity, extra_candidates=extra,
+        objectives=obj_set)
     # worst-case scenario of the winner via the exact oracle (independent of
-    # the grid's candidate ordering), picked by F so per-scenario dq
-    # denominators participate in the max
+    # the grid's candidate ordering), picked by the scenario score so
+    # per-scenario dq denominators participate in the max
     lats = [latency(graph, s.fleet, x, cost_cfg) for s in scenarios]
-    fs = [objective_F(lat, float(d), beta) for lat, d in zip(lats, dq_s)]
+    if obj_set is None:
+        fs = [objective_F(lat, float(d), beta) for lat, d in zip(lats, dq_s)]
+    else:
+        fs = [obj_set.scalar_total(graph, s.fleet, x, float(d), beta,
+                                   cost_cfg)
+              for s, d in zip(scenarios, dq_s)]
     k = int(np.argmax(fs))
     return OptResult(x=x, dq_fraction=float(dq_s[k]), F=fs[k],
                      latency=lats[k], history=[worst_F],

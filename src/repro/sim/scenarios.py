@@ -76,6 +76,11 @@ class ScenarioConfig:
     graph_families: tuple[str, ...] = GRAPH_FAMILIES
     n_ops: tuple[int, int] = (4, 10)
     max_selectivity: float = 2.0
+    # per-operator payloads so the §3.1 objectives are non-degenerate on
+    # generated graphs: out_bytes drives network movement, op_work drives
+    # device occupancy (zero work ⇒ occupancy identically zero)
+    out_bytes: tuple[float, float] = (0.25, 4.0)
+    op_work: tuple[float, float] = (0.05, 0.5)
     trace_len: int = 48
     base_rate: float = 256.0
     diurnal_amplitude: float = 0.6
@@ -162,7 +167,9 @@ def perturbed_fleet(fleet, rng: np.random.Generator, jitter: float = 0.3):
     noise = (noise + noise.T) / 2.0
     com2 = com * noise
     np.fill_diagonal(com2, np.diag(com))
-    return ExplicitFleet(com_cost=com2, speed=fleet.speed.copy(),
+    # effective speed: the com matrix above carries any degrade multipliers,
+    # so the materialized fleet must carry the matching compute slowdown too
+    return ExplicitFleet(com_cost=com2, speed=fleet.effective_speed().copy(),
                          region=getattr(fleet, "region", None))
 
 
@@ -217,37 +224,54 @@ def _sel(rng: np.random.Generator, cfg: ScenarioConfig) -> float:
     return float(rng.uniform(0.1, cfg.max_selectivity))
 
 
+def _with_payload(g: OpGraph, rng: np.random.Generator,
+                  cfg: ScenarioConfig) -> OpGraph:
+    """Draw per-operator out_bytes / work so every §3.1 objective has
+    something to price on a generated graph (uniform over the configured
+    ranges; applied to all topology families alike)."""
+    ops = [dataclasses.replace(
+        op,
+        out_bytes=float(rng.uniform(*cfg.out_bytes)),
+        work=float(rng.uniform(*cfg.op_work)))
+        for op in g.operators]
+    return OpGraph(ops, list(g.edges))
+
+
 def random_graph(rng: np.random.Generator,
                  cfg: ScenarioConfig = ScenarioConfig(),
                  family: str | None = None) -> OpGraph:
-    """One topology drawn from the configured families."""
+    """One topology drawn from the configured families, with per-operator
+    out_bytes/work payloads (network movement and occupancy objectives are
+    non-degenerate on every generated graph)."""
     family = family or cfg.graph_families[
         int(rng.integers(len(cfg.graph_families)))]
     n = int(rng.integers(cfg.n_ops[0], cfg.n_ops[1] + 1))
     if family == "chain":
         ops = [Operator(f"op{i}", _sel(rng, cfg)) for i in range(n)]
-        return OpGraph(ops, [(i, i + 1) for i in range(n - 1)])
-    if family == "diamond":
+        g = OpGraph(ops, [(i, i + 1) for i in range(n - 1)])
+    elif family == "diamond":
         width = max(n - 2, 2)
         ops = ([Operator("src", 1.0)]
                + [Operator(f"mid{k}", _sel(rng, cfg)) for k in range(width)]
                + [Operator("sink", 1.0)])
         edges = [(0, 1 + k) for k in range(width)] \
             + [(1 + k, 1 + width) for k in range(width)]
-        return OpGraph(ops, edges)
-    if family == "fan_out":
+        g = OpGraph(ops, edges)
+    elif family == "fan_out":
         ops = [Operator("src", 1.0)] \
             + [Operator(f"leaf{k}", _sel(rng, cfg)) for k in range(n - 1)]
-        return OpGraph(ops, [(0, k) for k in range(1, n)])
-    if family == "fan_in":
+        g = OpGraph(ops, [(0, k) for k in range(1, n)])
+    elif family == "fan_in":
         ops = [Operator(f"feed{k}", _sel(rng, cfg)) for k in range(n - 1)] \
             + [Operator("agg", 1.0)]
-        return OpGraph(ops, [(k, n - 1) for k in range(n - 1)])
-    if family == "layered":
-        return random_dag(n, edge_prob=0.45, rng=rng,
-                          max_selectivity=cfg.max_selectivity)
-    raise ValueError(f"unknown graph family {family!r}; "
-                     f"choose from {GRAPH_FAMILIES}")
+        g = OpGraph(ops, [(k, n - 1) for k in range(n - 1)])
+    elif family == "layered":
+        g = random_dag(n, edge_prob=0.45, rng=rng,
+                       max_selectivity=cfg.max_selectivity)
+    else:
+        raise ValueError(f"unknown graph family {family!r}; "
+                         f"choose from {GRAPH_FAMILIES}")
+    return _with_payload(g, rng, cfg)
 
 
 # -- traces -------------------------------------------------------------------

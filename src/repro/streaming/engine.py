@@ -116,7 +116,7 @@ class StreamingEngine:
         heterogeneity terms used as live state)."""
         if isinstance(self.fleet, RegionFleet):
             self.fleet = ExplicitFleet(com_cost=self.fleet.com_matrix(),
-                                       speed=self.fleet.speed,
+                                       speed=self.fleet.effective_speed(),
                                        available=self.fleet.available)
         self.fleet = self.fleet.degrade_device(device, factor)
         prob = PlacementProblem(self.graph.meta, self.fleet,
@@ -133,7 +133,7 @@ class StreamingEngine:
         as a warm start)."""
         if isinstance(self.fleet, RegionFleet):
             self.fleet = ExplicitFleet(com_cost=self.fleet.com_matrix(),
-                                       speed=self.fleet.speed,
+                                       speed=self.fleet.effective_speed(),
                                        available=self.fleet.available)
         fleet2, keep = self.fleet.without_devices([device])
         x0 = self.x[:, keep]

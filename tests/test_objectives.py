@@ -1,0 +1,331 @@
+"""Property tests: the unified multi-objective layer (repro.core.objectives)
+— every batched/structured objective twin against its float64 numpy oracle
+(≤1e-5 relative) on random graphs/fleets, including degrade ≠ 1, alpha > 0,
+and the S == 1 broadcast case — plus the ObjectiveSet scalarization contract
+through PlacementProblem / robust search and the score_grid dq validation."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # container lacks hypothesis — use the shim
+    from repro.testing.propcheck import given, settings, strategies as st
+
+from repro.core import (
+    OBJECTIVES,
+    CostConfig,
+    ExplicitFleet,
+    ObjectiveSet,
+    PlacementProblem,
+    RegionFleet,
+    device_occupancy,
+    greedy_transfer,
+    latency,
+    network_movement,
+    objective_F,
+    random_dag,
+    random_placement,
+)
+from repro.sim import (
+    BatchedEvaluator,
+    ScenarioConfig,
+    pack_fleets,
+    pack_placements,
+    pack_region_fleets,
+    pack_speeds,
+    region_scenario_batch,
+    robust_placement,
+    scenario_robust_search,
+)
+
+SETTINGS = dict(max_examples=15, deadline=None)
+REL = 1e-5
+ALL_OBJECTIVES = tuple(sorted(OBJECTIVES))
+
+
+def _payload_dag(rng, n_ops):
+    """Random DAG whose operators carry out_bytes/work so no objective is
+    degenerate."""
+    g = random_dag(n_ops, edge_prob=0.5, rng=rng)
+    g = type(g)(
+        [dataclasses.replace(op,
+                             out_bytes=float(rng.uniform(0.25, 4.0)),
+                             work=float(rng.uniform(0.05, 0.5)))
+         for op in g.operators],
+        list(g.edges))
+    return g
+
+
+def _region_fleets(rng, n_dev, n_fleets):
+    """RegionFleets sharing one layout: random inter matrices, lognormal
+    speeds, and degrade ≠ 1 on all but the first."""
+    n_regions = int(rng.integers(1, n_dev + 1))
+    region = rng.integers(0, n_regions, n_dev)
+    fleets = []
+    for k in range(n_fleets):
+        inter = rng.uniform(0.1, 2.0, (n_regions, n_regions))
+        inter = (inter + inter.T) / 2
+        degrade = None if k == 0 else rng.uniform(1.0, 4.0, n_dev)
+        fleets.append(RegionFleet(region=region, inter=inter,
+                                  degrade=degrade,
+                                  speed=rng.lognormal(0.0, 0.3, n_dev)))
+    return fleets
+
+
+@st.composite
+def instances(draw):
+    seed = draw(st.integers(0, 2**31 - 1))
+    alpha = draw(st.sampled_from([0.0, 0.5]))
+    rng = np.random.default_rng(seed)
+    n_ops = int(rng.integers(2, 7))
+    n_dev = int(rng.integers(2, 8))
+    g = _payload_dag(rng, n_ops)
+    fleets = _region_fleets(rng, n_dev, int(rng.integers(1, 4)))
+    xs = [random_placement(n_ops, np.ones((n_ops, n_dev), bool), rng,
+                           sparsity=float(rng.uniform(0.0, 0.6)))
+          for _ in range(int(rng.integers(1, 4)))]
+    return g, fleets, xs, CostConfig(alpha=alpha)
+
+
+@given(instances())
+@settings(**SETTINGS)
+def test_every_twin_matches_oracle(inst):
+    """One multi-objective score_grid dispatch on BOTH representations ==
+    every objective's scalar oracle, including the weighted scalarization
+    (covers degrade ≠ 1 fleets, alpha > 0, per-scenario dq, S == 1)."""
+    g, fleets, xs, cfg = inst
+    obj = ObjectiveSet.of(*ALL_OBJECTIVES,
+                          weights=[0.5 + 0.25 * k
+                                   for k in range(len(ALL_OBJECTIVES))])
+    ev = BatchedEvaluator(g, cfg)
+    P = pack_placements(xs)
+    beta = 0.8
+    dq = np.linspace(0.1, 0.9, len(fleets))
+    packs = [pack_region_fleets(fleets),
+             pack_fleets(fleets)]
+    speeds = [None, pack_speeds(fleets)]
+    for pack, speed in zip(packs, speeds):
+        res = ev.score_grid(P, pack, dq=dq, beta=beta, objectives=obj,
+                            speed=speed)
+        assert res.names == obj.names
+        assert np.asarray(res.scalarized).shape == (len(fleets), len(xs))
+        for name in obj.names:
+            grid = np.asarray(res[name])
+            for si, fleet in enumerate(fleets):
+                for pi, x in enumerate(xs):
+                    want = OBJECTIVES[name].scalar(g, fleet, x,
+                                                   float(dq[si]), beta, cfg)
+                    assert grid[si, pi] == pytest.approx(
+                        want, rel=REL, abs=1e-6), (name, si, pi)
+        # weighted scalarization == Σ w_k · grid_k == scalar_total oracle
+        stack = np.stack([np.asarray(res[n]) for n in obj.names])
+        np.testing.assert_allclose(
+            np.asarray(res.scalarized),
+            np.einsum("k,ksp->sp", obj.weights, stack), rtol=1e-6, atol=1e-6)
+        want = obj.scalar_total(g, fleets[0], xs[0], float(dq[0]), beta, cfg)
+        assert np.asarray(res.scalarized)[0, 0] == pytest.approx(
+            want, rel=REL, abs=1e-6)
+
+
+@given(instances())
+@settings(**SETTINGS)
+def test_single_scenario_broadcast(inst):
+    """An S == 1 family/pack broadcasts its multi-objective grids across the
+    whole placement batch on both representations."""
+    g, fleets, xs, cfg = inst
+    obj = ObjectiveSet.of(*ALL_OBJECTIVES)
+    ev = BatchedEvaluator(g, cfg)
+    P = pack_placements(xs)
+    for pack, speed in ((pack_region_fleets(fleets[:1]), None),
+                        (pack_fleets(fleets[:1]), pack_speeds(fleets[:1]))):
+        res = ev.score_grid(P, pack, dq=0.4, beta=0.6, objectives=obj,
+                            speed=speed)
+        for name in obj.names:
+            grid = np.asarray(res[name])
+            assert grid.shape == (1, len(xs))
+            for pi, x in enumerate(xs):
+                want = OBJECTIVES[name].scalar(g, fleets[0], x, 0.4, 0.6, cfg)
+                assert grid[0, pi] == pytest.approx(want, rel=REL, abs=1e-6)
+
+
+@given(instances())
+@settings(**SETTINGS)
+def test_scalar_movement_matches_bruteforce(inst):
+    """The factorized scalar network_movement (segment-sum on RegionFleets,
+    no materialized com, no per-edge outer) == the brute-force bilinear."""
+    g, fleets, xs, _ = inst
+    rates = g.cumulative_rates()
+    for fleet in fleets:
+        com = fleet.com_matrix()
+        ef = ExplicitFleet(com_cost=com)
+        for weighted in (False, True):
+            brute = 0.0
+            for i, j in g.edges:
+                op = g.operators[i]
+                outer = np.outer(xs[0][i], xs[0][j])
+                np.fill_diagonal(outer, 0.0)
+                if weighted:
+                    outer = outer * com
+                brute += rates[i] * op.selectivity * op.out_bytes * outer.sum()
+            for fl in (fleet, ef):
+                assert network_movement(g, fl, xs[0], weighted) \
+                    == pytest.approx(brute, rel=1e-9, abs=1e-12)
+
+
+def test_latency_f_spec_builders_match_oracle():
+    """The latency_f spec's own dense/structured builders match the oracle.
+    (score_grid routes latency through the evaluator's Pallas-aware
+    machinery instead, but the spec twins are the public reference — this
+    pins them so the two routes can't drift.)"""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(8)
+    g = _payload_dag(rng, 5)
+    fleet = _region_fleets(rng, 6, 2)[1]
+    x = random_placement(5, np.ones((5, 6), bool), rng, 0.3)
+    cfg = CostConfig(alpha=0.5)
+    spec = OBJECTIVES["latency_f"]
+    dq, beta = 0.25, 0.6
+    want = spec.scalar(g, fleet, x, dq, beta, cfg)
+    ones = jnp.ones(6)
+    raw = spec.build_dense(g, cfg)(
+        jnp.asarray(x), jnp.asarray(fleet.com_matrix()), ones)
+    assert float(spec.finish(raw, dq, beta)) == pytest.approx(
+        want, rel=REL, abs=1e-6)
+    raw = spec.build_structured(g, fleet.region, fleet.n_regions,
+                                fleet.self_cost, cfg)(
+        jnp.asarray(x), jnp.asarray(fleet.inter),
+        jnp.asarray(fleet.degrade_or_ones()), ones)
+    assert float(spec.finish(raw, dq, beta)) == pytest.approx(
+        want, rel=REL, abs=1e-6)
+
+
+def test_perturbed_fleet_keeps_effective_speed():
+    """Materializing a degraded RegionFleet into a what-if ExplicitFleet
+    must carry the compute slowdown along with the degraded links."""
+    from repro.sim import perturbed_fleet
+
+    rng = np.random.default_rng(9)
+    g = _payload_dag(rng, 4)
+    rf = _region_fleets(rng, 5, 1)[0].degrade_device(1, 4.0)
+    ef = perturbed_fleet(rf, rng, jitter=0.0)
+    x = np.full((4, 5), 0.2)
+    np.testing.assert_allclose(device_occupancy(g, ef, x),
+                               device_occupancy(g, rf, x), rtol=1e-12)
+
+
+def test_occupancy_prices_degrade():
+    """The §3.1 occupancy bugfix: a straggler with a degrade multiplier
+    occupies proportionally longer (effective speed = speed / degrade), and
+    degrade_device no longer double-counts by also dividing nominal speed."""
+    rng = np.random.default_rng(5)
+    g = _payload_dag(rng, 4)
+    fleet = RegionFleet(region=np.zeros(3, dtype=np.int64),
+                        inter=np.ones((1, 1)))
+    base = device_occupancy(g, fleet, np.full((4, 3), 1 / 3))
+    slow = fleet.degrade_device(1, 2.0)
+    occ = device_occupancy(g, slow, np.full((4, 3), 1 / 3))
+    np.testing.assert_allclose(occ[1], 2.0 * base[1], rtol=1e-12)
+    np.testing.assert_allclose(occ[[0, 2]], base[[0, 2]], rtol=1e-12)
+    # nominal speed untouched — the multiplier lives in degrade alone
+    np.testing.assert_allclose(slow.speed, fleet.speed)
+
+
+def test_score_grid_rejects_wronglength_dq():
+    """dq must be a scalar or exactly (S,): a broadcastable-but-wrong (1,)
+    (or a (P,) slipped in) raises with shapes in the message."""
+    rng = np.random.default_rng(2)
+    g = _payload_dag(rng, 3)
+    fleets = _region_fleets(rng, 4, 3)
+    xs = [random_placement(3, np.ones((3, 4), bool), rng) for _ in range(5)]
+    ev = BatchedEvaluator(g)
+    for pack in (pack_region_fleets(fleets), pack_fleets(fleets)):
+        for bad in (np.array([0.1]), np.zeros(5), np.zeros((3, 1))):
+            with pytest.raises(ValueError, match="scalar or shape"):
+                ev.score_grid(pack_placements(xs), pack, dq=bad)
+        # scalar and exact (S,) still fine
+        ev.score_grid(pack_placements(xs), pack, dq=0.2)
+        ev.score_grid(pack_placements(xs), pack, dq=np.full(3, 0.2))
+
+
+def test_placement_problem_scores_weighted_sum():
+    """PlacementProblem.score with an ObjectiveSet == the hand-built
+    weighted sum of scalar oracles, and greedy_transfer descends it."""
+    rng = np.random.default_rng(3)
+    g = _payload_dag(rng, 5)
+    fleet = _region_fleets(rng, 5, 2)[1]
+    obj = ObjectiveSet.from_weights(latency_f=1.0, network_movement=0.05,
+                                    occupancy_max=0.5)
+    prob = PlacementProblem(g, fleet, beta=0.5, objectives=obj)
+    x = random_placement(5, np.ones((5, 5), bool), rng)
+    want = (1.0 * objective_F(latency(g, fleet, x), 0.2, 0.5)
+            + 0.05 * network_movement(g, fleet, x)
+            + 0.5 * device_occupancy(g, fleet, x).max())
+    assert prob.score(x, dq=0.2) == pytest.approx(want, rel=1e-12)
+    res = greedy_transfer(prob, max_rounds=5)
+    assert res.F <= prob.score(x := res.x, res.dq_fraction) + 1e-9
+    assert res.F == pytest.approx(prob.score(res.x, res.dq_fraction),
+                                  rel=1e-12)
+
+
+def test_robust_search_multi_objective_end_to_end():
+    """scenario_robust_search with objectives: the structured one-dispatch
+    scalarized grid drives min–max selection, and the reported F is the
+    worst scenario's exact scalarized score."""
+    rng = np.random.default_rng(11)
+    cfg = ScenarioConfig(trace_len=4, n_regions=(3, 3),
+                         devices_per_region=(2, 3))
+    scens = region_scenario_batch(rng, 4, cfg)
+    g = scens[0].graph
+    obj = ObjectiveSet.from_weights(latency_f=1.0, network_movement_cost=0.1,
+                                    occupancy_imbalance=0.25)
+    x, worst, grid = robust_placement(g, scens, rng, n_candidates=24,
+                                      objectives=obj)
+    assert grid.shape == (4, 24)
+    k = int(grid.max(axis=0).argmin())
+    for si, s in enumerate(scens):
+        want = obj.scalar_total(g, s.fleet, x)
+        assert grid[si, k] == pytest.approx(want, rel=2e-5, abs=1e-6)
+    res = scenario_robust_search(g, scens, rng, n_candidates=32,
+                                 objectives=obj)
+    fs = [obj.scalar_total(g, s.fleet, res.x) for s in scens]
+    assert res.F == pytest.approx(max(fs), rel=1e-12)
+    assert res.latency == pytest.approx(
+        latency(g, scens[int(np.argmax(fs))].fleet, res.x), rel=1e-12)
+
+
+def test_objective_set_validation():
+    with pytest.raises(ValueError, match="unknown objective"):
+        ObjectiveSet.of("latency")
+    with pytest.raises(ValueError, match="weights"):
+        ObjectiveSet.of("latency_f", weights=[1.0, 2.0])
+    with pytest.raises(ValueError, match="duplicate"):
+        ObjectiveSet.of("latency_f", "latency_f")
+    with pytest.raises(ValueError, match="at least one"):
+        ObjectiveSet.of()
+    # speed is meaningless without objectives / on structured families
+    rng = np.random.default_rng(4)
+    g = _payload_dag(rng, 3)
+    fleets = _region_fleets(rng, 4, 2)
+    ev = BatchedEvaluator(g)
+    xs = pack_placements([random_placement(3, np.ones((3, 4), bool), rng)])
+    with pytest.raises(ValueError, match="objectives"):
+        ev.score_grid(xs, pack_fleets(fleets), speed=pack_speeds(fleets))
+    with pytest.raises(ValueError, match="speeds"):
+        ev.score_grid(xs, pack_region_fleets(fleets), speed=np.ones(4),
+                      objectives=ObjectiveSet.of("occupancy_max"))
+
+
+def test_generated_graphs_carry_payloads():
+    """sim graphs draw out_bytes/work, so movement and occupancy grids are
+    non-degenerate on every generated family."""
+    from repro.sim import random_graph
+
+    rng = np.random.default_rng(6)
+    for family in ("chain", "diamond", "fan_out", "fan_in", "layered"):
+        g = random_graph(rng, family=family)
+        assert all(op.work > 0.0 for op in g.operators)
+        assert all(op.out_bytes > 0.0 for op in g.operators)

@@ -230,16 +230,21 @@ def test_family_fleet_oracle_equivalence():
 
 
 def test_from_fleets_preserves_per_scenario_speed():
-    """Packing fleets whose speeds differ (e.g. via degrade_device, which
-    also slows compute) must round-trip each scenario's speed through
-    fleet(s) — the compute extension prices the degraded fleet correctly."""
+    """degrade_device keeps nominal speed and encodes the slowdown in
+    ``degrade`` alone; packing and unpacking a family must round-trip each
+    scenario's EFFECTIVE speed — the compute/occupancy objectives price the
+    degraded fleet correctly without double-counting the multiplier."""
     rng = np.random.default_rng(13)
     base = _random_region_fleets(rng, 6, 1)[0]
     slow = base.degrade_device(2, 4.0)
+    assert slow.speed[2] == pytest.approx(base.speed[2])  # nominal untouched
+    assert slow.effective_speed()[2] == pytest.approx(base.speed[2] / 4.0)
     fam = RegionFleetFamily.from_fleets([base, slow])
-    np.testing.assert_allclose(fam.fleet(0).speed, base.speed)
-    np.testing.assert_allclose(fam.fleet(1).speed, slow.speed)
-    assert fam.fleet(1).speed[2] == pytest.approx(base.speed[2] / 4.0)
-    # shared speeds stay a single (V,) vector
-    fam2 = RegionFleetFamily.from_fleets([base, base])
-    assert fam2.speed.ndim == 1
+    np.testing.assert_allclose(fam.fleet(0).effective_speed(),
+                               base.effective_speed())
+    np.testing.assert_allclose(fam.fleet(1).effective_speed(),
+                               slow.effective_speed())
+    np.testing.assert_allclose(fam.effective_speeds()[1],
+                               slow.effective_speed())
+    # shared nominal speeds stay a single (V,) vector
+    assert fam.speed.ndim == 1
