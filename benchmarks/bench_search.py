@@ -1,0 +1,292 @@
+"""Batched search vs the seed's scalar-loop searchers at matched candidate
+counts (BENCH_search.json).
+
+The search-subsystem claims this benchmark records:
+
+  * the batched searchers (``repro.search``) return the same argmin as the
+    seed scalar loops on fixed-seed problems — ≤1e-5 relative objective
+    difference after exact re-scoring — while issuing O(dispatches) instead
+    of O(candidates) evaluator calls (the ``dispatches`` column vs the
+    ``evals`` column);
+  * at matched candidate counts the batched random/exhaustive searchers are
+    faster than the scalar loop — the CI ``--check`` gate — on BOTH
+    scenario representations: a dense ExplicitFleet problem and a
+    structured RegionFleet problem at V = 131 072 (full sweep), where the
+    engine packs an S=1 RegionFleetFamily and never materializes V×V;
+  * greedy descent runs one dispatch per (operator, round) instead of one
+    scalar score per move (reported, not gated: on tiny instances its
+    per-dispatch overhead can tie the scalar loop).
+
+Usage:
+  python -m benchmarks.bench_search            # full sweep (V to 131072)
+  python -m benchmarks.bench_search --smoke    # tiny V (CI)
+  python -m benchmarks.bench_search --check    # exit 1 on slower-than-scalar
+                                               # or argmin mismatch
+"""
+
+import argparse
+import json
+import math
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import (ExplicitFleet, PlacementProblem, RegionFleet,
+                        linear_graph)
+from repro.core.optimizers import DQCoupling, OptResult, _dq_grid
+from repro.core.placement import random_placement, uniform_placement
+from repro.search import (BatchedProblem, exhaustive_search, greedy_transfer,
+                          random_search)
+
+OUT_PATH = Path("BENCH_search.json")
+
+N_OPS = 8
+BETA = 1.0
+
+# (V_dense, P_random, V_structured)
+FULL = dict(v_dense=64, p_random=512, v_structured=131072, p_structured=32,
+            greedy_v=16)
+# smoke sizes keep the scalar side several × the batched side so the CI
+# gate has margin against runner noise (V=16/P=128 measured only ~1.4× on
+# idle hardware; scalar scoring scales with V while the dispatch does not)
+SMOKE = dict(v_dense=64, p_random=384, v_structured=4096, p_structured=64,
+             greedy_v=8)
+
+
+def _time(f):
+    t0 = time.perf_counter()
+    out = f()
+    return time.perf_counter() - t0, out
+
+
+def _dense_problem(rng, v: int, coupling: bool = True) -> PlacementProblem:
+    com = rng.uniform(0.1, 3.0, (v, v))
+    com = (com + com.T) / 2.0
+    np.fill_diagonal(com, 0.0)
+    g = linear_graph([float(s) for s in rng.uniform(0.5, 1.5, N_OPS)])
+    dq = DQCoupling(cap0=np.full(v, max(2.0 * N_OPS / v, 0.5)),
+                    load=np.full(v, 0.1)) if coupling else None
+    return PlacementProblem(g, ExplicitFleet(com_cost=com), beta=BETA, dq=dq)
+
+
+def _structured_problem(rng, v: int, r: int = 16) -> PlacementProblem:
+    region = np.sort(rng.integers(0, r, v))
+    inter = rng.uniform(0.5, 3.0, (r, r))
+    inter = (inter + inter.T) / 2.0
+    np.fill_diagonal(inter, 0.05)
+    g = linear_graph([float(s) for s in rng.uniform(0.5, 1.5, N_OPS)])
+    return PlacementProblem(g, RegionFleet(region=region, inter=inter),
+                            beta=BETA)
+
+
+# -- seed-faithful scalar-loop references -------------------------------------
+
+def _scalar_random_search(prob, rng, n_candidates: int) -> OptResult:
+    """The seed loop: one exact prob.score per (candidate, dq)."""
+    avail = prob.availability()
+    n_ops, _ = avail.shape
+    dqs = _dq_grid(prob)
+    best_F, best_x, best_dq, evals = math.inf, None, 0.0, 0
+    for x in [uniform_placement(n_ops, avail)] + [
+            random_placement(n_ops, avail, rng, 0.5)
+            for _ in range(n_candidates)]:
+        for dq in dqs:
+            f = prob.score(x, dq)
+            evals += 1
+            if f < best_F:
+                best_F, best_x, best_dq = f, x, dq
+    return OptResult.of(prob, best_x, best_dq, [best_F], evals)
+
+
+def _scalar_greedy(prob, deltas=(0.4, 0.2, 0.1, 0.05),
+                   max_rounds: int = 60) -> OptResult:
+    """The seed greedy: per-move prob.score calls."""
+    avail = prob.availability()
+    n_ops, _ = avail.shape
+    x = uniform_placement(n_ops, avail)
+    dq, evals = 0.0, 1
+    best = prob.score(x, dq)
+    for delta in deltas:
+        for _ in range(max_rounds):
+            improved = False
+            for dq_cand in _dq_grid(prob, include=(dq,)):
+                f = prob.score(x, dq_cand)
+                evals += 1
+                if f < best - 1e-12:
+                    best, dq, improved = f, dq_cand, True
+            for i in range(n_ops):
+                idx = np.flatnonzero(avail[i])
+                best_move, best_f = None, best
+                for u in idx:
+                    if x[i, u] < delta - 1e-12:
+                        continue
+                    for v in idx:
+                        if v == u:
+                            continue
+                        x[i, u] -= delta
+                        x[i, v] += delta
+                        f = prob.score(x, dq)
+                        evals += 1
+                        x[i, u] += delta
+                        x[i, v] -= delta
+                        if f < best_f - 1e-12:
+                            best_f, best_move = f, (u, v)
+                if best_move is not None:
+                    u, v = best_move
+                    x[i, u] -= delta
+                    x[i, v] += delta
+                    best, improved = best_f, True
+            if not improved:
+                break
+    return OptResult.of(prob, x, dq, [best], evals)
+
+
+def _scalar_exhaustive(prob, granularity: int) -> OptResult:
+    import itertools
+
+    from repro.search.candidates import _per_op_rows
+    avail = prob.availability()
+    best_F, best_x, best_dq, evals = math.inf, None, 0.0, 0
+    dqs = _dq_grid(prob)
+    for rows in itertools.product(*_per_op_rows(avail, granularity)):
+        x = np.stack(rows)
+        for dq in dqs:
+            f = prob.score(x, dq)
+            evals += 1
+            if f < best_F:
+                best_F, best_x, best_dq = f, x, dq
+    return OptResult.of(prob, best_x, best_dq, [best_F], evals)
+
+
+def _rel_diff(a: float, b: float) -> float:
+    return abs(a - b) / max(abs(a), abs(b), 1e-12)
+
+
+def _row(name, scalar_s, batched_s, res_scalar, res_batched, gated, **extra):
+    return dict(name=name, seconds_scalar=scalar_s, seconds_batched=batched_s,
+                speedup=scalar_s / max(batched_s, 1e-12),
+                evals=res_batched.evals, dispatches=res_batched.dispatches,
+                F_scalar=res_scalar.F, F_batched=res_batched.F,
+                rel_objective_diff=_rel_diff(res_scalar.F, res_batched.F),
+                gated=gated, **extra)
+
+
+def run(smoke: bool = False) -> list[str]:
+    cfg = SMOKE if smoke else FULL
+    rows, out = [], []
+
+    # Every batched searcher is timed against a WARM engine (one warm call
+    # first, same shapes): the claim under test is steady-state dispatch
+    # cost at matched candidate counts, not one-time jit compilation — the
+    # same convention the other benches use (warm call inside _time).
+
+    # -- random search, dense representation, matched candidates -------------
+    rng = np.random.default_rng(0)
+    prob = _dense_problem(rng, cfg["v_dense"])
+    eng = BatchedProblem(prob)
+    run_b = lambda: random_search(prob, np.random.default_rng(7),
+                                  n_candidates=cfg["p_random"], engine=eng)
+    run_b()  # warm (jit compile per bucket shape)
+    bs, rb = _time(run_b)
+    ss, rs = _time(lambda: _scalar_random_search(
+        prob, np.random.default_rng(7), cfg["p_random"]))
+    rows.append(_row("random_dense", ss, bs, rs, rb, gated=True,
+                     V=cfg["v_dense"], candidates=cfg["p_random"]))
+
+    # -- random search, structured representation (V to 131072) --------------
+    prob_s = _structured_problem(rng, cfg["v_structured"])
+    eng_s = BatchedProblem(prob_s)
+    run_b = lambda: random_search(
+        prob_s, np.random.default_rng(7), n_candidates=cfg["p_structured"],
+        batch=cfg["p_structured"], engine=eng_s)
+    run_b()  # warm
+    bs, rb = _time(run_b)
+    ss, rs = _time(lambda: _scalar_random_search(
+        prob_s, np.random.default_rng(7), cfg["p_structured"]))
+    rows.append(_row("random_structured", ss, bs, rs, rb, gated=True,
+                     V=cfg["v_structured"], candidates=cfg["p_structured"]))
+
+    # -- exhaustive oracle, matched enumeration ------------------------------
+    prob_e = _dense_problem(np.random.default_rng(3), 3, coupling=True)
+    prob_e = PlacementProblem(linear_graph([1.0, 1.5, 1.0]),
+                              prob_e.fleet, beta=BETA, dq=prob_e.dq)
+    eng_e = BatchedProblem(prob_e)
+    run_b = lambda: exhaustive_search(prob_e, granularity=4, engine=eng_e)
+    run_b()  # warm
+    bs, rb = _time(run_b)
+    ss, rs = _time(lambda: _scalar_exhaustive(prob_e, granularity=4))
+    rows.append(_row("exhaustive", ss, bs, rs, rb, gated=True,
+                     V=3, candidates=rb.evals))
+
+    # -- greedy descent (reported, not gated) --------------------------------
+    prob_g = _dense_problem(np.random.default_rng(5), cfg["greedy_v"])
+    eng_g = BatchedProblem(prob_g)
+    run_b = lambda: greedy_transfer(prob_g, engine=eng_g)
+    run_b()  # warm
+    bs, rb = _time(run_b)
+    ss, rs = _time(lambda: _scalar_greedy(prob_g))
+    rows.append(_row("greedy_dense", ss, bs, rs, rb, gated=False,
+                     V=cfg["greedy_v"], candidates=rb.evals))
+
+    for r in rows:
+        out.append(f"search_{r['name']},{r['seconds_batched'] * 1e3:.2f}ms,"
+                   f"speedup={r['speedup']:.2f}x,"
+                   f"dispatches={r['dispatches']},evals={r['evals']},"
+                   f"rel_diff={r['rel_objective_diff']:.2e}")
+
+    gated = [r for r in rows if r["gated"]]
+    report = {
+        "n_ops": N_OPS,
+        "beta": BETA,
+        "smoke": smoke,
+        "rows": rows,
+        "min_gated_speedup": min(r["speedup"] for r in gated),
+        "max_gated_rel_diff": max(r["rel_objective_diff"] for r in gated),
+        "max_structured_V": max(r["V"] for r in rows
+                                if "structured" in r["name"]),
+    }
+    OUT_PATH.write_text(json.dumps(report, indent=2) + "\n")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="tiny V sweep (CI)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless every gated batched searcher beats "
+                         "the scalar loop at equal candidates AND matches "
+                         "its argmin objective to ≤1e-5 relative")
+    args = ap.parse_args()
+    for row in run(smoke=args.smoke):
+        print(row)
+    if args.check:
+        report = json.loads(OUT_PATH.read_text())
+        ok = True
+        if report["min_gated_speedup"] < 1.0:
+            print(f"CHECK FAILED: batched searcher slower than the scalar "
+                  f"loop at equal candidates (min speedup "
+                  f"{report['min_gated_speedup']:.2f}x < 1.0x)",
+                  file=sys.stderr)
+            ok = False
+        if report["max_gated_rel_diff"] > 1e-5:
+            print(f"CHECK FAILED: batched argmin disagrees with the scalar "
+                  f"loop (rel objective diff "
+                  f"{report['max_gated_rel_diff']:.2e} > 1e-5)",
+                  file=sys.stderr)
+            ok = False
+        if not report["smoke"] and report["max_structured_V"] < 131072:
+            print(f"CHECK FAILED: structured sweep stopped at "
+                  f"V={report['max_structured_V']} < 131072", file=sys.stderr)
+            ok = False
+        if not ok:
+            sys.exit(1)
+        print(f"check OK: min gated speedup "
+              f"{report['min_gated_speedup']:.2f}x, max rel diff "
+              f"{report['max_gated_rel_diff']:.2e}, structured V up to "
+              f"{report['max_structured_V']}")
+
+
+if __name__ == "__main__":
+    main()

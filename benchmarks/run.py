@@ -13,7 +13,8 @@ def main() -> None:
     from benchmarks import (bench_dq_tradeoff, bench_geo_calibration,
                             bench_kernels, bench_optimizers,
                             bench_paper_example, bench_roofline,
-                            bench_scaling, bench_scenarios, bench_structured)
+                            bench_scaling, bench_scenarios, bench_search,
+                            bench_structured)
     suites = [
         ("paper_example", bench_paper_example.run),
         ("dq_tradeoff", bench_dq_tradeoff.run),
@@ -21,6 +22,7 @@ def main() -> None:
         ("scaling", bench_scaling.run),
         ("scenarios", bench_scenarios.run),
         ("structured", bench_structured.run),
+        ("search", bench_search.run),
         ("kernels", bench_kernels.run),
         ("geo_calibration", bench_geo_calibration.run),
         ("roofline", bench_roofline.run),

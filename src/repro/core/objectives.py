@@ -26,7 +26,11 @@ oracles — so min–max robust search can trade worst-case F against WAN bytes
 moved or device occupancy with one knob.
 
 Objective registry (weights are the caller's unit exchange rates — the
-objectives are NOT normalized to a common scale):
+objectives are NOT normalized to a common scale here;
+``repro.search.decision.ObjectiveScales`` fits per-objective scales from a
+sampled grid when dimensionless weights are wanted, and
+``repro.search.decision.pareto_front`` extracts the non-dominated set the
+per-objective grids already hold):
 
   ``latency_f``             paper eq. 8: critical-path latency / (1 + β·dq)
   ``network_movement``      §3.1 [26]: Σ_edges rate·s·bytes·Σ_{u≠v} x_iu·x_jv

@@ -9,19 +9,27 @@ like every system the paper surveys — we attack them with heuristics:
   * ``projected_gradient``  — beyond-paper: jax.grad through the smoothed
     cost model (logits reparameterization ⇒ rows live on the simplex by
     construction, availability enforced with a −inf mask).
-  * ``random_search``       — vmap-vectorized scoring of N random placements
+  * ``random_search``       — batched scoring of N random placements
     (the "massive parallelism" of the *optimizer* itself).
 
 All optimizers jointly handle the paper's DQ_fraction: quality checks eat
 device capacity via :class:`DQCoupling` (caps(dq) = cap0 − dq·load), which is
 how the worked example's "DQ=1 forces fraction x_{2,0} off device 0" story
 becomes a mechanical constraint.
+
+The discrete searchers (exhaustive / greedy / annealing / random) live in
+:mod:`repro.search` — the batched three-layer search subsystem — and are
+re-exported here with their seed signatures; this module keeps the problem
+definitions (:class:`PlacementProblem`, :class:`DQCoupling`,
+:class:`OptResult`) and the gradient-based :func:`projected_gradient`.  The
+imports stay function-local so core remains importable without the search /
+sim layers and the package dependency arrow (search → sim → core) stays
+one-directional.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import math
 
 import jax
@@ -33,7 +41,6 @@ from repro.core.devices import ExplicitFleet, RegionFleet
 from repro.core.graph import OpGraph
 from repro.core.jaxmodel import SmoothConfig, make_latency_fn
 from repro.core.objectives import ObjectiveSet
-from repro.core.placement import random_placement, uniform_placement
 
 __all__ = [
     "DQCoupling",
@@ -103,16 +110,22 @@ class PlacementProblem:
 
 @dataclasses.dataclass
 class OptResult:
+    """``evals`` counts logical candidate evaluations (the seed's unit);
+    ``dispatches`` counts jitted device dispatches — the batched searchers'
+    O(candidates) → O(dispatches) collapse (0 for scalar-loop paths)."""
+
     x: np.ndarray
     dq_fraction: float
     F: float
     latency: float
     history: list[float]
     evals: int
+    dispatches: int = 0
 
     @classmethod
     def of(cls, prob: PlacementProblem, x: np.ndarray, dq: float,
-           history: list[float], evals: int) -> "OptResult":
+           history: list[float], evals: int,
+           dispatches: int = 0) -> "OptResult":
         """F is the problem's own score: paper eq. (8) single-objective, or
         the weighted scalarization when the problem carries an ObjectiveSet
         (latency stays the raw critical-path latency either way)."""
@@ -120,150 +133,58 @@ class OptResult:
         f = objective_F(lat, dq, prob.beta) if prob.objectives is None \
             else prob.objectives.scalar_total(prob.graph, prob.fleet, x, dq,
                                               prob.beta, prob.cost_cfg)
-        return cls(x=x, dq_fraction=dq, F=f,
-                   latency=lat, history=history, evals=evals)
+        return cls(x=x, dq_fraction=dq, F=f, latency=lat, history=history,
+                   evals=evals, dispatches=dispatches)
 
 
-def _dq_grid(prob: PlacementProblem, steps: int = 5):
-    return [0.0] if prob.beta == 0.0 else list(np.linspace(0.0, 1.0, steps + 1))
+def _dq_grid(prob: PlacementProblem, steps: int = 5,
+             include: tuple[float, ...] = ()) -> list[float]:
+    """DQ candidates: {k/steps} when β > 0, else {0} — ALWAYS containing the
+    ``include`` values (the search's incumbent dq_fraction, so re-optimizing
+    from a previous result can never regress the dq term just because the
+    incumbent is not a grid multiple; see repro.search.candidates.dq_grid)."""
+    from repro.search.candidates import dq_grid
+
+    return list(dq_grid(prob.beta, steps=steps, include=include))
 
 
-# -- exhaustive oracle --------------------------------------------------------
-
-def _compositions(total: int, parts: int):
-    """All ways to write ``total`` as an ordered sum of ``parts`` ≥0 ints."""
-    if parts == 1:
-        yield (total,)
-        return
-    for head in range(total + 1):
-        for tail in _compositions(total - head, parts - 1):
-            yield (head,) + tail
-
+# -- batched discrete searchers (implementations in repro.search) -------------
 
 def exhaustive_search(prob: PlacementProblem, granularity: int = 4,
                       max_states: int = 2_000_000) -> OptResult:
     """Enumerate placements on the grid x_{i,·} ∈ {k/granularity} — the
-    discrete oracle the heuristics are tested against.  Exponential."""
-    avail = prob.availability()
-    n_ops, n_dev = avail.shape
-    per_op_choices: list[list[np.ndarray]] = []
-    for i in range(n_ops):
-        idx = np.flatnonzero(avail[i])
-        rows = []
-        for comp in _compositions(granularity, idx.size):
-            row = np.zeros(n_dev)
-            row[idx] = np.asarray(comp) / granularity
-            rows.append(row)
-        per_op_choices.append(rows)
-    n_states = math.prod(len(c) for c in per_op_choices)
-    if n_states > max_states:
-        raise ValueError(f"search space {n_states} exceeds max_states={max_states}")
-    best_F, best_x, best_dq, evals = math.inf, None, 0.0, 0
-    dqs = _dq_grid(prob)
-    for rows in itertools.product(*per_op_choices):
-        x = np.stack(rows)
-        for dq in dqs:
-            evals += 1
-            f = prob.score(x, dq)
-            if f < best_F:
-                best_F, best_x, best_dq = f, x, dq
-    return OptResult.of(prob, best_x, best_dq, [best_F], evals)
+    discrete oracle the heuristics are tested against.  Exponential state
+    count; scored in chunked batched dispatches by
+    :func:`repro.search.searchers.exhaustive_search` (this is a
+    signature-preserving re-export)."""
+    from repro.search.searchers import exhaustive_search as impl
 
+    return impl(prob, granularity=granularity, max_states=max_states)
 
-# -- greedy local descent -----------------------------------------------------
 
 def greedy_transfer(prob: PlacementProblem, x0: np.ndarray | None = None,
                     deltas: tuple[float, ...] = (0.4, 0.2, 0.1, 0.05),
                     max_rounds: int = 60) -> OptResult:
     """Move δ mass between device pairs while it improves exact F.
 
-    Deterministic, paper-style bottleneck chasing: for every operator try all
-    (src→dst) transfers of the current δ; take the best; shrink δ when no
-    move helps.  DQ is co-optimized on a grid at each δ level.
-    """
-    avail = prob.availability()
-    n_ops, n_dev = avail.shape
-    x = uniform_placement(n_ops, avail) if x0 is None else x0.copy()
-    dq = 0.0
-    # start from a feasible point under the tightest relevant caps
-    if prob.dq is not None:
-        from repro.core.placement import project_with_caps
-        x = project_with_caps(x, prob.dq.caps(dq), avail)
-    best = prob.score(x, dq)
-    history, evals = [best], 1
-    for delta in deltas:
-        for _ in range(max_rounds):
-            improved = False
-            for dq_cand in _dq_grid(prob):
-                f = prob.score(x, dq_cand)
-                evals += 1
-                if f < best - 1e-12:
-                    best, dq, improved = f, dq_cand, True
-            for i in range(n_ops):
-                idx = np.flatnonzero(avail[i])
-                best_move, best_f = None, best
-                for u in idx:
-                    if x[i, u] < delta - 1e-12:
-                        continue
-                    for v in idx:
-                        if v == u:
-                            continue
-                        x[i, u] -= delta
-                        x[i, v] += delta
-                        f = prob.score(x, dq)
-                        evals += 1
-                        x[i, u] += delta
-                        x[i, v] -= delta
-                        if f < best_f - 1e-12:
-                            best_f, best_move = f, (u, v)
-                if best_move is not None:
-                    u, v = best_move
-                    x[i, u] -= delta
-                    x[i, v] += delta
-                    best = best_f
-                    improved = True
-            history.append(best)
-            if not improved:
-                break
-    return OptResult.of(prob, x, dq, history, evals)
+    Deterministic, paper-style bottleneck chasing; each operator's whole
+    transfer neighborhood is scored as one batched dispatch by
+    :func:`repro.search.searchers.greedy_transfer` (signature-preserving
+    re-export).  DQ is co-optimized on a grid at each δ level."""
+    from repro.search.searchers import greedy_transfer as impl
 
+    return impl(prob, x0=x0, deltas=deltas, max_rounds=max_rounds)
 
-# -- simulated annealing ------------------------------------------------------
 
 def simulated_annealing(prob: PlacementProblem, rng: np.random.Generator,
                         steps: int = 4000, t0: float = 0.5, t1: float = 1e-3,
                         x0: np.ndarray | None = None) -> OptResult:
-    avail = prob.availability()
-    n_ops, n_dev = avail.shape
-    x = random_placement(n_ops, avail, rng) if x0 is None else x0.copy()
-    dq = 0.0
-    if prob.dq is not None:
-        from repro.core.placement import project_with_caps
-        x = project_with_caps(x, prob.dq.caps(dq), avail)
-    cur = prob.score(x, dq)
-    best, best_x, best_dq = cur, x.copy(), dq
-    history, evals = [cur], 1
-    for step in range(steps):
-        t = t0 * (t1 / t0) ** (step / max(steps - 1, 1))
-        y, ndq = x.copy(), dq
-        if prob.beta > 0.0 and rng.random() < 0.15:
-            ndq = float(np.clip(dq + rng.choice([-0.2, -0.1, 0.1, 0.2]), 0.0, 1.0))
-        else:
-            i = rng.integers(n_ops)
-            idx = np.flatnonzero(avail[i])
-            if idx.size >= 2:
-                u, v = rng.choice(idx, size=2, replace=False)
-                amt = rng.uniform(0.0, x[i, u])
-                y[i, u] -= amt
-                y[i, v] += amt
-        f = prob.score(y, ndq)
-        evals += 1
-        if math.isfinite(f) and (f < cur or rng.random() < math.exp(-(f - cur) / max(t, 1e-9))):
-            x, dq, cur = y, ndq, f
-            if cur < best:
-                best, best_x, best_dq = cur, x.copy(), dq
-        history.append(best)
-    return OptResult.of(prob, best_x, best_dq, history, evals)
+    """Randomized global search (block-batched Metropolis; implementation in
+    :func:`repro.search.searchers.simulated_annealing` — signature-preserving
+    re-export; ``steps`` still counts proposals)."""
+    from repro.search.searchers import simulated_annealing as impl
+
+    return impl(prob, rng, steps=steps, t0=t0, t1=t1, x0=x0)
 
 
 # -- projected gradient (JAX autodiff through the smoothed model) -------------
@@ -321,11 +242,11 @@ def projected_gradient(prob: PlacementProblem, steps: int = 400,
         z, w = params
     x = np.asarray(x_of(z), dtype=np.float64)
     x = x / x.sum(axis=1, keepdims=True)
-    dq_candidates = _dq_grid(prob, steps=10)
     dq_soft = float(jax.nn.sigmoid(w)) if beta > 0.0 else 0.0
-    # snap to the best feasible dq near the relaxed optimum
+    # snap to the best feasible dq on the grid — which always includes the
+    # relaxed optimum itself (exact, not rounded)
     best_dq, best_f = 0.0, math.inf
-    for dq in sorted(set(dq_candidates + [round(dq_soft, 2)])):
+    for dq in _dq_grid(prob, steps=10, include=(dq_soft,)):
         if prob.dq is not None:
             from repro.core.placement import project_with_caps
             xf = project_with_caps(x, prob.dq.caps(dq), avail)
@@ -359,42 +280,15 @@ def scenario_robust_search(graph: OpGraph, scenarios, rng: np.random.Generator,
 def random_search(prob: PlacementProblem, rng: np.random.Generator,
                   n_candidates: int = 2048, sparsity: float = 0.5,
                   batch: int = 256) -> OptResult:
-    """Score many random placements with a vmapped hard-max latency fn.
+    """Score many random placements in chunked batched dispatches
+    (:func:`repro.search.searchers.random_search` — signature-preserving
+    re-export; multi-objective problems now select on the weighted
+    scalarization, where the seed loop selected on latency-F alone).
 
     Demonstrates that the JAX cost model evaluates thousands of placements
     per second even for large fleets — the scale knob of the paper's title.
     """
-    avail = prob.availability()
-    n_ops, _ = avail.shape
-    lat_fn = make_latency_fn(prob.graph, prob.fleet,
-                             SmoothConfig(alpha=prob.cost_cfg.alpha, temp=0.0))
-    batched = jax.jit(jax.vmap(lat_fn))
-    best_F, best_x, best_dq, evals = math.inf, None, 0.0, 0
-    dqs = _dq_grid(prob)
-    history = []
-    # seed with the uniform placement — never return something worse
-    uni = uniform_placement(n_ops, avail)
-    for dq in dqs:
-        f = prob.score(uni, dq)
-        evals += 1
-        if f < best_F:
-            best_F, best_x, best_dq = f, uni, dq
-    done = 0
-    while done < n_candidates:
-        b = min(batch, n_candidates - done)
-        xs = np.stack([random_placement(n_ops, avail, rng, sparsity) for _ in range(b)])
-        lats = np.asarray(batched(jnp.asarray(xs)))
-        for k in range(b):
-            for dq in dqs:
-                evals += 1
-                if not prob.feasible(xs[k], dq):
-                    continue
-                f = objective_F(float(lats[k]), dq, prob.beta)
-                if f < best_F:
-                    best_F, best_x, best_dq = f, xs[k], dq
-        history.append(best_F)
-        done += b
-    if best_x is None:  # all infeasible — fall back to uniform
-        best_x = uniform_placement(n_ops, avail)
-        best_dq = 0.0
-    return OptResult.of(prob, best_x, best_dq, history, evals)
+    from repro.search.searchers import random_search as impl
+
+    return impl(prob, rng, n_candidates=n_candidates, sparsity=sparsity,
+                batch=batch)

@@ -1,0 +1,47 @@
+"""Unified batched search subsystem: candidates → batched scoring →
+decision (see search/README.md for the layer diagram and how the seed's
+scalar-loop optimizers map onto it).
+
+Layer 1 (:mod:`repro.search.candidates`) emits *batches* of
+(placement, dq) proposals; Layer 2 (:mod:`repro.search.engine`) scores each
+batch through ``BatchedEvaluator.score_grid`` in one jitted dispatch per
+chunk — O(dispatches) instead of O(candidates) evaluator calls; Layer 3
+(:mod:`repro.search.decision`, :mod:`repro.search.robust`) turns grids into
+choices: weighted scalarization (optionally on auto-normalized objective
+axes), min–max robust selection, Pareto-front extraction, and per-scenario
+DQ co-optimization.
+
+The seed entry points (``repro.core.optimizers.{exhaustive_search,
+greedy_transfer, simulated_annealing, random_search}``,
+``repro.sim.replay.{robust_placement, scenario_robust_search}``) delegate
+here and keep their signatures.
+"""
+
+from repro.search.candidates import (anneal_path, chunked,
+                                     count_grid_states, dq_grid,
+                                     grid_placements, random_placements,
+                                     transfer_neighborhood)
+from repro.search.decision import (ObjectiveScales, ParetoFront,
+                                   candidate_values, dq_caps_mask,
+                                   joint_dq_scores, pareto_front, pareto_mask,
+                                   robust_select, scalarize, split_dq_term)
+from repro.search.engine import BatchedProblem
+from repro.search.robust import robust_placement, scenario_robust_search
+from repro.search.searchers import (exhaustive_search, greedy_transfer,
+                                    random_search, simulated_annealing)
+
+__all__ = [
+    # layer 1 — candidates
+    "anneal_path", "chunked", "count_grid_states", "dq_grid",
+    "grid_placements", "random_placements", "transfer_neighborhood",
+    # layer 2 — batched scoring
+    "BatchedProblem",
+    # layer 3 — decision
+    "ObjectiveScales", "ParetoFront", "candidate_values", "dq_caps_mask",
+    "joint_dq_scores", "pareto_front", "pareto_mask", "robust_select",
+    "scalarize", "split_dq_term",
+    "robust_placement", "scenario_robust_search",
+    # searchers
+    "exhaustive_search", "greedy_transfer", "random_search",
+    "simulated_annealing",
+]

@@ -1,0 +1,257 @@
+"""Layer 3 — decision: turn scored grids into choices.
+
+Inputs are the (S, P) per-objective grids a single
+``BatchedEvaluator.score_grid`` dispatch returns (an
+:class:`repro.core.objectives.ObjectiveGrids`) or plain (P, K) value
+matrices; outputs are selections:
+
+  * :func:`robust_select`        — min–max: worst scenario per candidate,
+    argmin over candidates (the decision rule of ``robust_placement``);
+  * :func:`joint_dq_scores`      — per-scenario DQ co-optimization: expand
+    the dq axis analytically, mask DQCoupling-infeasible (candidate, dq)
+    pairs, and return each (scenario, candidate) cell's best-dq score plus
+    the chosen dq index;
+  * :func:`pareto_front`         — non-dominated extraction over ≥2
+    objectives: the weighted sum is one point per weight vector, but the
+    per-objective grids already hold the whole front;
+  * :class:`ObjectiveScales`     — automatic objective normalization: fit
+    per-objective (offset, scale) from the sampled grid (min/range), so
+    scalarization weights become dimensionless trade-off knobs instead of
+    raw unit exchange rates.  Min/range is positive-affine-equivariant,
+    which makes equal-weight normalized selection invariant under rescaling
+    any one objective (property-tested).
+
+Everything here is plain numpy on already-computed grids — no dispatches.
+All objectives are minimized.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "ParetoFront",
+    "ObjectiveScales",
+    "candidate_values",
+    "pareto_mask",
+    "pareto_front",
+    "scalarize",
+    "robust_select",
+    "split_dq_term",
+    "dq_caps_mask",
+    "joint_dq_scores",
+]
+
+
+# -- grid → per-candidate objective vectors -----------------------------------
+
+def candidate_values(grids, scenario="worst") -> np.ndarray:
+    """(P, K) objective vectors from an :class:`ObjectiveGrids`.
+
+    ``scenario`` picks the row: an int takes that scenario's (P, K) slice;
+    ``"worst"`` takes the per-objective max over scenarios — the
+    conservative envelope the min–max decision rule already optimizes, so
+    fronts extracted from it are robust trade-off menus."""
+    cols = []
+    for name in grids.names:
+        g = np.asarray(grids.grids[name], dtype=np.float64)  # (S, P)
+        cols.append(g.max(axis=0) if scenario == "worst"
+                    else g[int(scenario)])
+    return np.stack(cols, axis=1)
+
+
+# -- Pareto extraction --------------------------------------------------------
+
+def pareto_mask(values: np.ndarray) -> np.ndarray:
+    """(P,) boolean — True where no other point dominates (minimization:
+    ``y`` dominates ``x`` iff ``y ≤ x`` everywhere and ``y < x`` somewhere).
+    Duplicates of a front point are all kept (they tie, neither dominates).
+    O(P²) worst case, but each eliminated point is skipped as a pivot."""
+    v = np.asarray(values, dtype=np.float64)
+    if v.ndim != 2:
+        raise ValueError(f"values must be (P, K), got {v.shape}")
+    n = v.shape[0]
+    mask = np.ones(n, dtype=bool)
+    for i in range(n):
+        if not mask[i]:
+            continue
+        dominated = (v >= v[i]).all(axis=1) & (v > v[i]).any(axis=1)
+        mask &= ~dominated
+    return mask
+
+
+@dataclasses.dataclass(frozen=True)
+class ParetoFront:
+    """Non-dominated candidates: ``indices`` into the scored placement
+    batch, their ``values`` (M, K), and the objective ``names`` labelling
+    the columns.  Rows are sorted by the first objective."""
+
+    indices: np.ndarray
+    values: np.ndarray
+    names: tuple[str, ...]
+
+    def __len__(self) -> int:
+        return int(self.indices.size)
+
+    def __iter__(self):
+        for i in range(len(self)):
+            yield int(self.indices[i]), self.values[i]
+
+
+def pareto_front(grids_or_values, scenario="worst",
+                 names: tuple[str, ...] | None = None) -> ParetoFront:
+    """Extract the non-dominated set from an ObjectiveGrids (one score_grid
+    dispatch holds the entire front) or a plain (P, K) value matrix."""
+    if hasattr(grids_or_values, "grids"):
+        values = candidate_values(grids_or_values, scenario)
+        names = tuple(grids_or_values.names)
+    else:
+        values = np.asarray(grids_or_values, dtype=np.float64)
+        names = tuple(names) if names is not None else \
+            tuple(f"objective_{k}" for k in range(values.shape[1]))
+    idx = np.flatnonzero(pareto_mask(values))
+    order = np.argsort(values[idx, 0], kind="stable")
+    idx = idx[order]
+    return ParetoFront(indices=idx, values=values[idx], names=names)
+
+
+# -- automatic objective normalization ----------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ObjectiveScales:
+    """Per-objective affine normalization ``(v − offset) / scale`` fit from
+    a sampled grid (offset = min, scale = range).
+
+    Because min and range are equivariant under ``v ↦ c·v`` (c > 0), the
+    normalized values — and therefore any weighted selection over them —
+    are invariant to rescaling an objective's units; weights act as
+    dimensionless trade-off knobs on [0, 1]-ish normalized axes."""
+
+    names: tuple[str, ...]
+    offset: np.ndarray  # (K,)
+    scale: np.ndarray   # (K,) strictly positive
+
+    @classmethod
+    def fit(cls, grids_or_values,
+            names: tuple[str, ...] | None = None) -> "ObjectiveScales":
+        """Fit from an ObjectiveGrids — pooling every (scenario, candidate)
+        cell; to fit from one scenario's slice or the worst-case envelope,
+        pass ``candidate_values(grids, scenario)`` instead — or from a
+        plain (P, K) value matrix.  Degenerate objectives (constant over
+        the sample) get scale 1 — they then contribute exactly 0 to every
+        normalized scalarization, keeping invariance."""
+        if hasattr(grids_or_values, "grids"):
+            names = tuple(grids_or_values.names)
+            values = np.stack(
+                [np.asarray(grids_or_values.grids[n],
+                            dtype=np.float64).ravel()
+                 for n in names], axis=1)
+        else:
+            values = np.asarray(grids_or_values, dtype=np.float64)
+            if values.ndim != 2:
+                raise ValueError(f"values must be 2-D, got {values.shape}")
+            names = tuple(names) if names is not None else \
+                tuple(f"objective_{k}" for k in range(values.shape[1]))
+        finite = np.where(np.isfinite(values), values, np.nan)
+        lo = np.nanmin(finite, axis=0)
+        hi = np.nanmax(finite, axis=0)
+        lo = np.where(np.isnan(lo), 0.0, lo)
+        hi = np.where(np.isnan(hi), 0.0, hi)
+        span = hi - lo
+        return cls(names=names, offset=lo,
+                   scale=np.where(span > 0.0, span, 1.0))
+
+    def apply(self, values: np.ndarray) -> np.ndarray:
+        """Normalize (…, K) objective values (∞ passes through as ∞)."""
+        return (np.asarray(values, dtype=np.float64) - self.offset) \
+            / self.scale
+
+
+def scalarize(values: np.ndarray, weights,
+              scales: ObjectiveScales | None = None) -> np.ndarray:
+    """(P,) weighted sum over (P, K) objective values, optionally on the
+    normalized axes (``scales``) so the weights are dimensionless."""
+    v = np.asarray(values, dtype=np.float64)
+    if scales is not None:
+        v = scales.apply(v)
+    return v @ np.asarray(weights, dtype=np.float64)
+
+
+# -- min–max robust selection -------------------------------------------------
+
+def robust_select(grid: np.ndarray) -> tuple[int, np.ndarray]:
+    """Min–max over an (S, P) score grid: returns (argmin candidate index,
+    (P,) worst-case scores).  First occurrence wins ties."""
+    g = np.asarray(grid, dtype=np.float64)
+    worst = g.max(axis=0)
+    return int(np.argmin(worst)), worst
+
+
+# -- splitting a raw grid into its dq-dependent and dq-free parts -------------
+
+def split_dq_term(raw_result):
+    """Split a RAW ``score_grid`` result (dispatched at dq = 0, β = 0) into
+    ``(lat, rest, w_lat)`` with ``score = rest + w_lat·lat/(1 + β·dq)``.
+
+    Only latency-F's ``finish`` depends on dq (paper eq. 8); every other
+    §3.1 objective is dq-independent, which is what makes the joint
+    (placement × dq) axis analytic.  ``raw_result`` is either the plain
+    latency grid (single-objective: rest = 0, w_lat = 1) or an
+    :class:`ObjectiveGrids` (its own names/weights locate the latency
+    term).  Shapes pass through unchanged ((S, P), (P,), …)."""
+    if not hasattr(raw_result, "grids"):
+        lat = np.asarray(raw_result, dtype=np.float64)
+        return lat, np.zeros_like(lat), 1.0
+    scal = np.asarray(raw_result.scalarized, dtype=np.float64)
+    w_lat = dict(zip(raw_result.names,
+                     raw_result.weights)).get("latency_f", 0.0)
+    if "latency_f" in raw_result.names:
+        lat = np.asarray(raw_result.grids["latency_f"], dtype=np.float64)
+    else:
+        lat = np.zeros_like(scal)
+    return lat, scal - w_lat * lat, w_lat
+
+
+def dq_caps_mask(placements, dq_values, coupling,
+                 atol: float = 1e-7) -> np.ndarray | None:
+    """(P, D) DQCoupling feasibility — the vectorized twin of
+    ``PlacementProblem.feasible``: per-device column mass ≤ cap0 − dq·load.
+    None coupling ⇒ None (everything feasible)."""
+    if coupling is None:
+        return None
+    col = np.asarray(placements, dtype=np.float64).sum(axis=1)   # (P, V)
+    dq_values = np.atleast_1d(np.asarray(dq_values, dtype=np.float64))
+    caps = (np.asarray(coupling.cap0, dtype=np.float64)[None, :]
+            - dq_values[:, None]
+            * np.asarray(coupling.load, dtype=np.float64)[None, :])
+    return (col[:, None, :] <= caps[None, :, :] + atol).all(axis=-1)
+
+
+# -- per-scenario DQ co-optimization ------------------------------------------
+
+def joint_dq_scores(lat: np.ndarray, dq_values: np.ndarray, beta: float,
+                    rest: np.ndarray | None = None, w_lat: float = 1.0,
+                    feasible: np.ndarray | None = None
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Co-optimize ``dq_fraction`` per (scenario, candidate) cell.
+
+    ``lat`` is the raw (S, P) latency grid (ONE dispatch, dq-independent);
+    the full (S, P, D) score tensor ``rest + w_lat·lat/(1 + β·dq_d)`` is
+    expanded analytically, ``feasible`` ((P, D), DQCoupling caps) masks
+    infeasible pairs with +inf, and each cell keeps its best dq.  Returns
+    ``(scores (S, P), dq_idx (S, P))`` — feed ``scores`` to
+    :func:`robust_select` for min–max with a per-scenario quality knob."""
+    lat = np.asarray(lat, dtype=np.float64)
+    dq_values = np.asarray(dq_values, dtype=np.float64)
+    denom = 1.0 + float(beta) * dq_values                    # (D,)
+    cube = w_lat * lat[:, :, None] / denom[None, None, :]    # (S, P, D)
+    if rest is not None:
+        cube = cube + np.asarray(rest, dtype=np.float64)[:, :, None]
+    if feasible is not None:
+        cube = np.where(np.asarray(feasible, dtype=bool)[None, :, :],
+                        cube, np.inf)
+    dq_idx = np.argmin(cube, axis=2)
+    return np.take_along_axis(cube, dq_idx[:, :, None], axis=2)[:, :, 0], \
+        dq_idx

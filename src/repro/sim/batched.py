@@ -29,6 +29,12 @@ batch for free.
 The float64 numpy oracle stays the correctness reference: property tests
 assert agreement to ≤1e-5 relative on random graphs/fleets/placements,
 including RegionFleet(Family) and ``alpha > 0`` enabledLinks cases.
+
+This module is the scoring backend of the search subsystem: the batched
+searchers (``repro.search``) chunk their candidate batches through
+``score_grid`` — single-problem searches pack the fleet as a singleton
+scenario — and the decision layer consumes the per-objective grids for
+Pareto extraction and normalization (see ``src/repro/search/README.md``).
 """
 
 from __future__ import annotations

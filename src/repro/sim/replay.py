@@ -8,26 +8,23 @@ Two instruments:
     mapped onto the engine's straggler/elasticity hooks) and report the
     modeled-vs-observed latency drift per scenario.  Drift is the evidence
     the paper's model tracks reality as conditions shift.
-  * :func:`robust_placement` — min–max placement selection over a scenario
-    batch: among P candidates, take the one minimizing worst-case F across
-    S fleets, scored by the batched evaluator in one dispatch.
+  * :func:`robust_placement` / :func:`scenario_robust_search` — min–max
+    placement selection over a scenario batch.  The implementations moved
+    to :mod:`repro.search.robust` (the batched search subsystem's decision
+    layer, which adds per-scenario DQ co-optimization); these names are
+    signature-preserving delegators, imported function-locally so the sim
+    package never imports the search layer at import time.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 import numpy as np
 
-from repro.core.costmodel import CostConfig, latency, objective_F
-from repro.core.devices import RegionFleet, RegionFleetFamily
+from repro.core.costmodel import CostConfig
 from repro.core.graph import OpGraph
-from repro.core.objectives import ObjectiveSet, as_objective_set
-from repro.core.placement import random_placement, uniform_placement
-from repro.sim.batched import (BatchedEvaluator, pack_fleets,
-                               pack_placements, pack_region_fleets,
-                               pack_speeds)
+from repro.core.objectives import ObjectiveSet
 from repro.sim.scenarios import MIN_ALIVE_DEVICES, Scenario, TraceEvent
 
 __all__ = ["ReplayStep", "ReplayReport", "replay_trace", "robust_placement",
@@ -121,39 +118,6 @@ def replay_trace(engine, trace: list[TraceEvent], rng: np.random.Generator,
                         n_removes=n_rem)
 
 
-# above this many bytes of stacked float64 com matrices the dense fallback
-# would OOM long before producing a useful error — refuse it instead
-_DENSE_FALLBACK_MAX_BYTES = 2 ** 31
-
-
-def _pack_scenario_fleets(scenarios: list[Scenario]):
-    """Structured pack (RegionFleetFamily) when every fleet shares one
-    region layout, dense (S, V, V) stack otherwise — the evaluator
-    dispatches on the result's type."""
-    fleets = [s.fleet for s in scenarios]
-    if all(isinstance(f, RegionFleet) for f in fleets):
-        try:
-            return pack_region_fleets(fleets)
-        except ValueError as e:
-            # heterogeneous layouts — dense is the only stack left; at the
-            # fleet sizes the structured path exists for, say so instead of
-            # dying in an (S, V, V) allocation
-            v = fleets[0].n_devices
-            dense_bytes = len(fleets) * v * v * 8
-            if dense_bytes > _DENSE_FALLBACK_MAX_BYTES:
-                raise ValueError(
-                    f"scenario fleets do not stack structurally ({e}); the "
-                    f"dense fallback would materialize ~{dense_bytes / 1e9:.1f}"
-                    f" GB of (S, V, V) com matrices — align the region "
-                    f"layouts (e.g. region_scenario_batch) to stay on the "
-                    f"structured path") from e
-            warnings.warn(
-                f"scenario fleets do not stack structurally ({e}); "
-                f"falling back to the dense (S, V, V) path", RuntimeWarning,
-                stacklevel=3)
-    return pack_fleets(fleets)
-
-
 def robust_placement(graph: OpGraph, scenarios: list[Scenario],
                      rng: np.random.Generator, n_candidates: int = 256,
                      cfg: CostConfig = CostConfig(), beta: float = 0.0,
@@ -161,45 +125,17 @@ def robust_placement(graph: OpGraph, scenarios: list[Scenario],
                      extra_candidates: list[np.ndarray] | None = None,
                      use_pallas: bool = False,
                      objectives: ObjectiveSet | None = None):
-    """Min–max what-if selection: the placement minimizing the worst-case
-    score over the scenario batch.
+    """Min–max what-if selection over a scenario batch — a
+    signature-preserving delegator to
+    :func:`repro.search.robust.robust_placement` (the search subsystem's
+    decision layer), returning ``(x_best, worst_score, grid)`` exactly as
+    before."""
+    from repro.search.robust import robust_placement as impl
 
-    Scenario batches of RegionFleets sharing one region layout (e.g.
-    ``region_scenario_batch``) are scored on the structured segment-sum path
-    — no (S, V, V) com stack, so the family can hold 10⁵-device fleets.
-    ``dq`` may be a scalar or per-scenario ``(S,)`` (scenario s's quality
-    knob divides its row of the grid).
-
-    ``objectives=None`` scores F alone (paper eq. 8); an ObjectiveSet makes
-    the score the weighted §3.1 scalarization — every objective's grid and
-    the weighted sum still come from ONE dispatch, so the min–max can trade
-    worst-case F against WAN bytes moved or occupancy skew.  On the dense
-    fallback the fleets' effective speeds are packed alongside the com stack
-    so the occupancy objectives see stragglers.
-
-    Returns ``(x_best, worst_score, grid)`` where grid is the full (S, P)
-    score matrix (the weighted scalarization when multi-objective; useful
-    for regret analysis: column min vs row min)."""
-    if not scenarios:
-        raise ValueError("need at least one scenario")
-    n_dev = scenarios[0].n_devices
-    avail = np.ones((graph.n_ops, n_dev), dtype=bool)
-    candidates = [uniform_placement(graph.n_ops, avail)]
-    candidates += [random_placement(graph.n_ops, avail, rng, sparsity)
-                   for _ in range(max(n_candidates - 1, 0))]
-    if extra_candidates:
-        candidates += [np.asarray(x) for x in extra_candidates]
-    ev = BatchedEvaluator(graph, cfg, use_pallas=use_pallas)
-    pack = _pack_scenario_fleets(scenarios)
-    speed = None
-    if objectives is not None and not isinstance(pack, RegionFleetFamily):
-        speed = pack_speeds([s.fleet for s in scenarios])
-    res = ev.score_grid(pack_placements(candidates), pack,
-                        dq=dq, beta=beta, objectives=objectives, speed=speed)
-    grid = np.asarray(res if objectives is None else res.scalarized)  # (S, P)
-    worst = grid.max(axis=0)                   # (P,) worst case per candidate
-    k = int(worst.argmin())
-    return candidates[k], float(worst[k]), grid
+    return impl(graph, scenarios, rng, n_candidates=n_candidates, cfg=cfg,
+                beta=beta, dq=dq, sparsity=sparsity,
+                extra_candidates=extra_candidates, use_pallas=use_pallas,
+                objectives=objectives)
 
 
 def scenario_robust_search(graph: OpGraph, scenarios: list[Scenario],
@@ -208,59 +144,15 @@ def scenario_robust_search(graph: OpGraph, scenarios: list[Scenario],
                            beta: float = 0.0,
                            dq: float | np.ndarray = 0.0,
                            sparsity: float = 0.5, warm_start: bool = True,
-                           objectives: ObjectiveSet | None = None):
-    """Optimizer-grade wrapper around :func:`robust_placement`.
+                           objectives: ObjectiveSet | None = None,
+                           **kwargs):
+    """Optimizer-grade min–max robust search — a signature-preserving
+    delegator to :func:`repro.search.robust.scenario_robust_search`, which
+    also accepts the search layer's joint-DQ extensions
+    (``co_optimize_dq=True, dq_steps=..., dq_coupling=...``) through
+    ``**kwargs``."""
+    from repro.search.robust import scenario_robust_search as impl
 
-    Random candidates are scored against every scenario fleet in one
-    batched dispatch (structured when the fleets share a region layout);
-    ``warm_start`` additionally seeds per-scenario greedy optima (each
-    scenario's best placement competes for the min–max crown — cheap and
-    often the winner when one fleet dominates the worst case).
-
-    ``dq`` may be a scalar or a per-scenario ``(S,)`` array (scenario s runs
-    its own quality knob).  The returned OptResult's F/latency/dq_fraction
-    are for the worst-case scenario of the winning placement, recomputed
-    with the exact oracle — and the worst case is the scenario maximizing
-    the score (**F**, not latency: with per-scenario dq the (1 + β·dq_s)
-    denominators differ, so the largest latency need not be the binding
-    scenario).
-
-    With an ``objectives`` ObjectiveSet the whole loop goes multi-objective:
-    warm-start greedy seeds descend the weighted scalarization, the grid is
-    the scalarized (S, P) matrix, and the reported F is the worst-case
-    scenario's scalarized score (latency stays that scenario's raw
-    critical-path latency).
-
-    Also reachable as ``repro.core.scenario_robust_search`` (a delegator —
-    the implementation lives here so the dependency arrow stays sim → core).
-    """
-    from repro.core.optimizers import (OptResult, PlacementProblem,
-                                       greedy_transfer)
-
-    obj_set = None if objectives is None else as_objective_set(objectives)
-    dq_s = np.broadcast_to(np.asarray(dq, dtype=np.float64),
-                           (len(scenarios),))
-    extra = []
-    if warm_start:
-        for s in scenarios[: min(len(scenarios), 4)]:
-            prob = PlacementProblem(graph, s.fleet, cost_cfg, beta=beta,
-                                    objectives=obj_set)
-            extra.append(greedy_transfer(prob, max_rounds=10).x)
-    x, worst_F, grid = robust_placement(
-        graph, scenarios, rng, n_candidates=n_candidates, cfg=cost_cfg,
-        beta=beta, dq=dq_s, sparsity=sparsity, extra_candidates=extra,
-        objectives=obj_set)
-    # worst-case scenario of the winner via the exact oracle (independent of
-    # the grid's candidate ordering), picked by the scenario score so
-    # per-scenario dq denominators participate in the max
-    lats = [latency(graph, s.fleet, x, cost_cfg) for s in scenarios]
-    if obj_set is None:
-        fs = [objective_F(lat, float(d), beta) for lat, d in zip(lats, dq_s)]
-    else:
-        fs = [obj_set.scalar_total(graph, s.fleet, x, float(d), beta,
-                                   cost_cfg)
-              for s, d in zip(scenarios, dq_s)]
-    k = int(np.argmax(fs))
-    return OptResult(x=x, dq_fraction=float(dq_s[k]), F=fs[k],
-                     latency=lats[k], history=[worst_F],
-                     evals=int(np.asarray(grid).size))
+    return impl(graph, scenarios, rng, n_candidates=n_candidates,
+                cost_cfg=cost_cfg, beta=beta, dq=dq, sparsity=sparsity,
+                warm_start=warm_start, objectives=objectives, **kwargs)

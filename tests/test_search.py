@@ -1,0 +1,234 @@
+"""Decision-layer tests for the repro.search subsystem: Pareto extraction,
+automatic objective normalization, joint (placement × dq) co-optimization,
+and the incumbent-including DQ grid."""
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # container lacks hypothesis — use the shim
+    from repro.testing.propcheck import given, settings, strategies as st
+
+from repro.core import (DQCoupling, ExplicitFleet, ObjectiveSet,
+                        PlacementProblem, linear_graph)
+from repro.core.optimizers import _dq_grid
+from repro.core.placement import random_placement
+from repro.search import (ObjectiveScales, candidate_values, dq_grid,
+                          joint_dq_scores, pareto_front, pareto_mask,
+                          robust_select, scalarize, scenario_robust_search)
+from repro.sim import (BatchedEvaluator, ScenarioConfig, pack_placements,
+                       region_scenario_batch)
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+OBJ3 = ObjectiveSet.from_weights(latency_f=1.0, network_movement=0.01,
+                                 occupancy_max=0.1)
+
+
+def _dominates(a, b):
+    return bool((a <= b).all() and (a < b).any())
+
+
+@st.composite
+def value_matrices(draw, max_p=40, k=3):
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    p = draw(st.integers(2, max_p))
+    return rng.uniform(0.0, 10.0, (p, k)), rng
+
+
+# -- Pareto extraction --------------------------------------------------------
+
+@given(value_matrices())
+@settings(**SETTINGS)
+def test_pareto_front_is_mutually_non_dominated(inst):
+    values, _ = inst
+    front = pareto_front(values)
+    assert len(front) >= 1
+    for a in range(len(front)):
+        for b in range(len(front)):
+            if a != b:
+                assert not _dominates(front.values[a], front.values[b])
+
+
+@given(value_matrices())
+@settings(**SETTINGS)
+def test_pareto_front_contains_weighted_argmin(inst):
+    """For every strictly positive weight vector, the scalarization argmin
+    is a non-dominated point, so its value vector must be on the front."""
+    values, rng = inst
+    front = pareto_front(values)
+    for _ in range(8):
+        w = rng.uniform(0.05, 2.0, values.shape[1])
+        k = int(np.argmin(scalarize(values, w)))
+        assert any(np.allclose(values[k], fv) for fv in front.values), \
+            f"argmin {values[k]} for weights {w} missing from front"
+
+
+def test_pareto_mask_keeps_duplicates_and_drops_dominated():
+    values = np.array([[1.0, 2.0],
+                       [1.0, 2.0],    # duplicate of a front point — kept
+                       [2.0, 1.0],
+                       [2.0, 2.0],    # dominated by both
+                       [1.0, 3.0]])   # dominated by [1, 2]
+    assert pareto_mask(values).tolist() == [True, True, True, False, False]
+
+
+# -- automatic objective normalization ----------------------------------------
+
+@given(value_matrices())
+@settings(**SETTINGS)
+def test_normalized_equal_weight_search_is_scale_invariant(inst):
+    """Rescaling any one objective's units (v ↦ c·v) must not change the
+    equal-weight argmin when scales are re-fit from the rescaled sample."""
+    values, rng = inst
+    k = values.shape[1]
+    w = np.ones(k)
+    base = int(np.argmin(scalarize(values, w, ObjectiveScales.fit(values))))
+    for col in range(k):
+        c = float(rng.uniform(0.01, 100.0))
+        scaled = values.copy()
+        scaled[:, col] *= c
+        got = int(np.argmin(
+            scalarize(scaled, w, ObjectiveScales.fit(scaled))))
+        assert got == base, f"rescaling objective {col} by {c} moved argmin"
+
+
+def test_normalization_handles_constant_objective():
+    values = np.array([[1.0, 5.0], [2.0, 5.0], [3.0, 5.0]])
+    scales = ObjectiveScales.fit(values)
+    normed = scales.apply(values)
+    assert np.allclose(normed[:, 1], 0.0)      # constant column → 0 exactly
+    assert np.allclose(normed[:, 0], [0.0, 0.5, 1.0])
+
+
+def test_scales_fit_ignores_infeasible_cells():
+    values = np.array([[1.0, 2.0], [np.inf, 3.0], [3.0, 4.0]])
+    scales = ObjectiveScales.fit(values)
+    assert np.isfinite(scales.offset).all() and np.isfinite(scales.scale).all()
+    assert scales.offset[0] == 1.0 and scales.scale[0] == 2.0
+
+
+# -- Pareto over a real score_grid dispatch (≥3 objectives) -------------------
+
+def test_pareto_from_single_score_grid_dispatch():
+    rng = np.random.default_rng(3)
+    cfg = ScenarioConfig(n_regions=(3, 3), devices_per_region=(2, 3),
+                         n_ops=(5, 5), out_bytes=(0.5, 2.0),
+                         op_work=(0.1, 0.5))
+    scens = region_scenario_batch(rng, 4, cfg)
+    g = scens[0].graph
+    v = scens[0].n_devices
+    xs = [random_placement(g.n_ops, np.ones((g.n_ops, v), bool), rng, 0.5)
+          for _ in range(64)]
+    ev = BatchedEvaluator(g)
+    grids = ev.score_grid(pack_placements(xs),
+                          np.stack([s.fleet.com_matrix() for s in scens]),
+                          dq=0.3, beta=0.5, objectives=OBJ3)
+    front = pareto_front(grids, scenario="worst")
+    assert front.names == tuple(OBJ3.names) and len(front.names) == 3
+    assert 1 <= len(front) <= 64
+    # mutual non-domination over the worst-case envelope
+    for a in range(len(front)):
+        for b in range(len(front)):
+            if a != b:
+                assert not _dominates(front.values[a], front.values[b])
+    # every weighted argmin over the same envelope sits on the front
+    vals = candidate_values(grids, scenario="worst")
+    for w in ([1.0, 0.01, 0.1], [0.1, 1.0, 1.0], [2.0, 0.5, 0.01]):
+        k = int(np.argmin(scalarize(vals, w)))
+        assert any(np.allclose(vals[k], fv) for fv in front.values)
+
+
+# -- joint dq decision --------------------------------------------------------
+
+def test_joint_dq_scores_picks_best_feasible_knob():
+    lat = np.array([[2.0, 4.0], [3.0, 6.0]])          # (S=2, P=2)
+    dqs = np.array([0.0, 0.5, 1.0])
+    beta = 1.0
+    feasible = np.array([[True, True, False],          # cand 0: dq ≤ 0.5
+                         [True, True, True]])          # cand 1: any dq
+    scores, idx = joint_dq_scores(lat, dqs, beta, feasible=feasible)
+    assert np.allclose(scores[:, 0], lat[:, 0] / 1.5)  # best feasible: 0.5
+    assert np.allclose(scores[:, 1], lat[:, 1] / 2.0)  # dq = 1
+    assert idx[:, 0].tolist() == [1, 1] and idx[:, 1].tolist() == [2, 2]
+    k, worst = robust_select(scores)
+    assert k == 0 and worst[0] == pytest.approx(3.0 / 1.5)
+
+
+def test_joint_dq_beats_placement_only_search():
+    """Acceptance: on a DQCoupling-enabled fixture, co-optimizing dq with
+    the placement finds a strictly better scalarized objective than the
+    same search with the quality knob pinned."""
+    rng = np.random.default_rng(7)
+    cfg = ScenarioConfig(n_regions=(3, 3), devices_per_region=(2, 2),
+                         n_ops=(4, 4))
+    scens = region_scenario_batch(rng, 3, cfg)
+    g = scens[0].graph
+    coupling = DQCoupling(cap0=np.full(scens[0].n_devices, 1.5),
+                          load=np.full(scens[0].n_devices, 0.4))
+    fixed = scenario_robust_search(g, scens, np.random.default_rng(1),
+                                   n_candidates=64, beta=1.5, dq=0.0,
+                                   warm_start=False)
+    joint = scenario_robust_search(g, scens, np.random.default_rng(1),
+                                   n_candidates=64, beta=1.5,
+                                   warm_start=False, co_optimize_dq=True,
+                                   dq_coupling=coupling)
+    assert joint.F < fixed.F
+    assert joint.dq_fraction > 0.0
+    # the chosen knob must respect the coupling's caps
+    caps = coupling.caps(joint.dq_fraction)
+    assert (joint.x.sum(axis=0) <= caps + 1e-7).all()
+
+
+def test_joint_dq_reaches_core_shim():
+    """The sim.replay delegator forwards the joint-dq kwargs."""
+    from repro.sim import scenario_robust_search as sim_srs
+
+    rng = np.random.default_rng(11)
+    cfg = ScenarioConfig(n_regions=(2, 2), devices_per_region=(2, 2),
+                         n_ops=(3, 3))
+    scens = region_scenario_batch(rng, 2, cfg)
+    g = scens[0].graph
+    res = sim_srs(g, scens, rng, n_candidates=16, beta=1.0,
+                  warm_start=False, co_optimize_dq=True)
+    assert res.dq_fraction == pytest.approx(1.0)  # no coupling ⇒ dq pins to 1
+
+
+# -- the incumbent-including DQ grid ------------------------------------------
+
+def test_dq_grid_always_contains_incumbent():
+    grid = dq_grid(beta=1.0, steps=5, include=(0.37,))
+    assert 0.37 in grid.tolist()
+    assert 0.0 in grid.tolist() and 1.0 in grid.tolist()
+    assert np.all(np.diff(grid) > 0)                       # sorted, deduped
+    # β = 0 keeps the degenerate {0} grid but still honors the incumbent
+    assert dq_grid(beta=0.0, include=(0.5,)).tolist() == [0.0, 0.5]
+    # out-of-range incumbents are clipped, not propagated
+    assert dq_grid(beta=1.0, include=(1.7,)).max() == 1.0
+
+
+def test_core_dq_grid_shim_matches():
+    g = linear_graph([1.0, 1.0])
+    fleet = ExplicitFleet(com_cost=np.array([[0.0, 1.0], [1.0, 0.0]]))
+    prob = PlacementProblem(g, fleet, beta=2.0)
+    assert 0.13 in _dq_grid(prob, include=(0.13,))
+    prob0 = PlacementProblem(g, fleet, beta=0.0)
+    assert _dq_grid(prob0) == [0.0]
+
+
+def test_greedy_restart_keeps_incumbent_dq():
+    """Re-optimizing from a previous result can no longer regress the dq
+    term to a worse grid value: the incumbent is always a candidate."""
+    from repro.search import greedy_transfer
+
+    g = linear_graph([1.0, 1.5, 1.0])
+    com = np.array([[0.0, 1.5, 2.0], [1.5, 0.0, 1.0], [2.0, 1.0, 0.0]])
+    fleet = ExplicitFleet(com_cost=com)
+    coupling = DQCoupling(cap0=np.full(3, 1.2), load=np.full(3, 0.2))
+    prob = PlacementProblem(g, fleet, beta=1.0, dq=coupling)
+    first = greedy_transfer(prob)
+    incumbent_dq = 0.73  # an off-grid knob (e.g. chosen by a finer search)
+    restart = greedy_transfer(prob, x0=first.x, dq0=incumbent_dq)
+    base = prob.score(first.x, incumbent_dq)
+    assert restart.F <= base + 1e-9
