@@ -1,0 +1,13 @@
+"""Closed-loop adaptive replay: run a trace tick-by-tick, watch
+modeled-vs-observed drift, recalibrate the cost model from observations
+(:func:`repro.core.calibration.refit_from_replay`), re-optimize placement
+and dq through the batched search engine, charge reconfiguration costs,
+and account regret against the static seed placement and a per-change
+oracle (see ``src/repro/sim/README.md`` for the data-flow diagram)."""
+
+from repro.adapt.controller import (AdaptiveConfig, AdaptiveController,
+                                    run_adaptive)
+from repro.adapt.regret import RegretReport, reconfiguration_cost
+
+__all__ = ["AdaptiveConfig", "AdaptiveController", "RegretReport",
+           "reconfiguration_cost", "run_adaptive"]

@@ -1,0 +1,382 @@
+"""The closed-loop adaptive controller (ROADMAP "close the loop").
+
+``AdaptiveController`` drives a :class:`repro.streaming.engine.
+StreamingEngine` through a trace tick by tick and closes the paper's
+calibrate → optimize loop at runtime:
+
+  observe ──► drift? ──► refit (repro.core.calibration.refit_from_replay)
+     ▲                      │
+     │                      ▼
+  reconfig ◄── worth it? ◄── re-optimize (repro.search, batched, warm-start)
+
+The controller's WORLD MODEL is a belief it maintains itself (the fleet it
+was handed at start, recalibrated from observations); the engine's true
+fleet drifts away through trace events (degrades, Markov region outages,
+selectivity drift).  Every tick it compares the believed model's latency
+against the observed latency and, when the normalized drift
+(:func:`repro.core.calibration.normalized_drift`) crosses a threshold:
+
+  1. re-fits per-device slowdowns and the global com scale from the
+     window's busy/latency series (``refit_from_replay``), adopting the new
+     belief only when it explains the window better;
+  2. re-optimizes the placement — and, with ``co_optimize_dq``, the
+     quality knob — through the batched search engine: ONE
+     ``BatchedProblem.score_batch`` dispatch over
+     :func:`repro.search.candidates.incumbent_candidates` (the incumbent
+     always included, so re-optimization can never regress the belief
+     score), crossed analytically with the dq grid;
+  3. charges the reconfiguration cost (state-movement bytes priced by the
+     believed com model — :func:`repro.adapt.regret.reconfiguration_cost`)
+     and only switches when the modeled gain amortizes it.
+
+Decisions are deterministic given (engine with ``observed="work"``, trace,
+rng seed).  Dispatch count is O(reconfigurations), not O(ticks) — gated in
+``benchmarks/bench_adaptive.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.adapt.regret import RegretReport, reconfiguration_cost
+from repro.core.calibration import (ReplayWindow, fit_work_unit,
+                                    normalized_drift, refit_from_replay)
+from repro.core.costmodel import CostConfig, latency, objective_F
+from repro.sim.replay import apply_fleet_event
+from repro.sim.scenarios import TraceEvent
+
+__all__ = ["AdaptiveConfig", "AdaptiveController", "run_adaptive"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveConfig:
+    """Knobs of the closed loop.
+
+    ``window`` ticks of observations feed each drift estimate / refit;
+    adaptation triggers when the drift signal exceeds ``drift_threshold``
+    (RMS of observed/modeled − 1, so 0.5 ≈ model off by 50%) and at least
+    ``cooldown`` ticks have passed since the last adaptation.  A switch
+    must buy back its reconfiguration charge within ``amortize_ticks``
+    ticks of modeled improvement.  ``beta``/``dq`` are paper eq. 8's
+    quality trade-off; ``co_optimize_dq`` searches the dq grid jointly
+    with the placement in the same dispatch."""
+
+    window: int = 6
+    drift_threshold: float = 0.5
+    # emergency fast path: drift beyond fast_factor × drift_threshold
+    # adapts with only 2 observed ticks instead of waiting for the full
+    # window — catastrophic shifts (a region outage under the current
+    # placement) are exactly when reaction delay is most expensive
+    fast_factor: float = 6.0
+    cooldown: int = 4
+    n_candidates: int = 64
+    jitter: float = 0.25
+    # belief-robust re-optimization: the candidate batch is scored min–max
+    # over `robust_scenarios` lognormal-jittered copies of the believed
+    # fleet (the belief is an ESTIMATE — hedging against its error keeps
+    # reconfigurations from over-concentrating on links the controller has
+    # not observed recently).  1 ⇒ pure point-belief optimization.
+    robust_scenarios: int = 4
+    robust_jitter: float = 0.4
+    oracle_candidates: int = 32
+    beta: float = 0.0
+    dq: float = 0.0
+    co_optimize_dq: bool = False
+    dq_steps: int = 5
+    state_bytes_per_op: float = 0.25
+    amortize_ticks: float = 20.0
+    row_width: int = 4
+
+    def __post_init__(self):
+        if self.window < 2:
+            raise ValueError(f"window must be ≥ 2 ticks (a drift estimate "
+                             f"needs two points), got {self.window}")
+
+
+def _renorm(x: np.ndarray) -> np.ndarray:
+    return x / np.maximum(x.sum(axis=1, keepdims=True), 1e-9)
+
+
+class AdaptiveController:
+    """One controller per (engine, trace) run; see the module docstring for
+    the loop it closes.  Use :func:`run_adaptive` for the one-call form."""
+
+    def __init__(self, engine, cfg: AdaptiveConfig = AdaptiveConfig(),
+                 name: str = "adaptive"):
+        from repro.core.devices import ExplicitFleet
+        from repro.sim.batched import BatchedEvaluator
+
+        self.engine = engine
+        self.cfg = cfg
+        self.name = name
+        self.graph = engine.graph.meta
+        self.cost_cfg = CostConfig(alpha=engine.cfg.alpha)
+        fleet = engine.fleet
+        self.believed = ExplicitFleet(
+            com_cost=np.asarray(fleet.com_matrix(), dtype=np.float64).copy(),
+            speed=np.asarray(fleet.effective_speed(),
+                             dtype=np.float64).copy(),
+            available=None if fleet.available is None
+            else np.asarray(fleet.available, dtype=bool).copy(),
+            region=np.asarray(fleet.region).copy())
+        self.believed_graph = self.graph  # selectivities re-fit over time
+        self.com_scale = 1.0
+        self.work_unit = float("nan")  # calibrated on the first full window
+        self.dq = float(cfg.dq)
+        # ONE evaluator for every re-optimization: the believed fleet is
+        # data to the jitted grid, so recalibrations don't retrace (only a
+        # material selectivity re-fit rebuilds it — the graph is structure)
+        self._evaluator = BatchedEvaluator(self.graph, self.cost_cfg)
+        self._evaluator_graph = self.graph
+        self.controller_dispatches = 0
+        self.oracle_dispatches = 0
+
+    # -- belief-side scoring --------------------------------------------------
+    def _believed_latency(self, x: np.ndarray) -> float:
+        return latency(self.believed_graph, self.believed, x, self.cost_cfg)
+
+    def _reoptimize(self, rng: np.random.Generator
+                    ) -> tuple[np.ndarray, float, float, float]:
+        """One-dispatch belief-robust re-optimization.
+
+        The warm-start candidate batch (incumbent first, uniform fallback
+        last) is scored against ``robust_scenarios`` jittered copies of the
+        believed fleet in ONE ``score_grid`` dispatch; the dq axis expands
+        analytically (the same ``/(1 + β·dq)`` trick the search layer
+        uses) and the min–max candidate wins — a placement hedged against
+        belief error, co-optimized with its quality knob.  Returns
+        (x_best, dq_best, score_best, score_incumbent)."""
+        from repro.core.placement import uniform_placement
+        from repro.search.candidates import dq_grid, incumbent_candidates
+        from repro.sim.batched import pack_fleets, pack_placements
+        from repro.sim.scenarios import perturbed_fleet
+
+        cfg = self.cfg
+        if self._evaluator_graph is not self.believed_graph:
+            from repro.sim.batched import BatchedEvaluator
+            self._evaluator = BatchedEvaluator(self.believed_graph,
+                                               self.cost_cfg)
+            self._evaluator_graph = self.believed_graph
+        avail = self.believed.availability(self.graph.n_ops)
+        cands = incumbent_candidates(self.engine.x, avail, rng,
+                                     cfg.n_candidates, jitter=cfg.jitter)
+        cands = np.concatenate(
+            [cands, uniform_placement(self.graph.n_ops, avail)[None]])
+        if cfg.co_optimize_dq and cfg.beta > 0.0:
+            dqs = dq_grid(cfg.beta, steps=cfg.dq_steps, include=(self.dq,))
+        else:
+            dqs = np.array([self.dq])
+        fleets = [self.believed] + [
+            perturbed_fleet(self.believed, rng, cfg.robust_jitter)
+            for _ in range(max(cfg.robust_scenarios - 1, 0))]
+        lat = np.asarray(self._evaluator.score_grid(
+            pack_placements(list(cands)), pack_fleets(fleets),
+            dq=0.0, beta=0.0), dtype=np.float64)          # (S, P)
+        self.controller_dispatches += 1
+        denom = 1.0 + cfg.beta * np.asarray(dqs, dtype=np.float64)
+        worst = (lat[:, :, None] / denom[None, None, :]).max(axis=0)  # (P, D)
+        i, d = divmod(int(np.argmin(worst)), worst.shape[1])
+        inc_d = int(np.argmin(np.abs(np.asarray(dqs) - self.dq)))
+        return (np.asarray(cands[i], dtype=np.float64), float(dqs[d]),
+                float(worst[i, d]), float(worst[0, inc_d]))
+
+    # -- truth-side scoring (regret accounting only) --------------------------
+    def _true_F(self, true_graph, x: np.ndarray, dq: float) -> float:
+        lat = latency(true_graph, self.engine.fleet, x, self.cost_cfg)
+        return objective_F(lat, dq, self.cfg.beta)
+
+    def _oracle_reoptimize(self, true_graph, oracle_x: np.ndarray,
+                           oracle_dq: float, extra: list[np.ndarray],
+                           rng: np.random.Generator
+                           ) -> tuple[np.ndarray, float]:
+        """Hindsight reference: scalar-oracle re-optimization against the
+        TRUE fleet and TRUE (drift-included) graph.  Accounting only — the
+        controller never sees this; scored with the float64 oracle, so it
+        issues no jitted dispatches of its own."""
+        from repro.search.candidates import dq_grid, incumbent_candidates
+
+        cfg = self.cfg
+        avail = self.engine.fleet.availability(self.graph.n_ops)
+        cands = list(incumbent_candidates(oracle_x, avail, rng,
+                                          cfg.oracle_candidates,
+                                          jitter=cfg.jitter))
+        cands += [np.asarray(x, dtype=np.float64) for x in extra]
+        dqs = dq_grid(cfg.beta, steps=cfg.dq_steps, include=(oracle_dq,)) \
+            if cfg.beta > 0.0 else np.array([oracle_dq])
+        best = (math.inf, oracle_x, oracle_dq)
+        for x in cands:
+            lat = latency(true_graph, self.engine.fleet, x, self.cost_cfg)
+            for dq in dqs:
+                f = objective_F(lat, float(dq), cfg.beta)
+                if f < best[0]:
+                    best = (f, x, float(dq))
+        return best[1], best[2]
+
+    # -- the loop -------------------------------------------------------------
+    def run(self, trace: list[TraceEvent],
+            rng: np.random.Generator) -> RegretReport:
+        cfg = self.cfg
+        eng = self.engine
+        alive = list(range(eng.fleet.n_devices))
+        static_x = eng.x.copy()
+        oracle_x, oracle_dq = eng.x.copy(), self.dq
+        oracle_dirty = True
+        # per-tick records
+        f_static, f_adaptive, f_oracle = [], [], []
+        charges, drift_series = [], []
+        reconfig_ticks, refit_ticks = [], []
+        # observation window (cleared on belief change / device-count change)
+        w_rates, w_busy, w_obs, w_mod, w_xs = [], [], [], [], []
+        w_rin, w_rout = [], []
+        ticks_since_adapt = cfg.cooldown
+        # a structural fleet event was applied and not yet adapted to: the
+        # controller KNOWS the world changed (it applied the event), it just
+        # doesn't know the magnitude — adapt as soon as a fresh window
+        # fills, even if the drift signal stays quiet (a wrong belief can
+        # look calibrated when the current placement avoids the links it is
+        # wrong about)
+        pending_structural = False
+
+        def clear_window():
+            w_rates.clear(); w_busy.clear(); w_obs.clear()
+            w_mod.clear(); w_xs.clear(); w_rin.clear(); w_rout.clear()
+
+        def make_window(tail):
+            return ReplayWindow(
+                rates=np.array(w_rates[tail]),
+                busy=np.stack(w_busy[tail]),
+                observed_latency=np.array(w_obs[tail]),
+                xs=np.stack(w_xs[tail]),
+                op_rows_in=np.stack(w_rin[tail]),
+                op_rows_out=np.stack(w_rout[tail]))
+
+        for ev in trace:
+            if ev.kind not in ("rate", "burst"):
+                idx = alive.index(ev.device) if ev.device in alive else None
+                applied = apply_fleet_event(eng, ev, alive, beta=cfg.beta,
+                                            reoptimize=False)
+                if applied == "remove":
+                    # device loss is OBSERVABLE — belief, baselines and the
+                    # window all shrink with the world
+                    keep = [u for u in range(self.believed.n_devices)
+                            if u != idx]
+                    self.believed, _ = self.believed.without_devices([idx])
+                    static_x = _renorm(static_x[:, keep])
+                    oracle_x = _renorm(oracle_x[:, keep])
+                if applied in ("degrade", "outage", "recover", "remove"):
+                    # a structural world change: pre-event observations
+                    # would make a refit fit an average of two worlds —
+                    # start the window fresh (drift detection then needs
+                    # `window` new ticks, a deliberate reaction delay).
+                    # Gradual "drift" events deliberately do NOT reset it:
+                    # chasing slow selectivity drift across a window is the
+                    # controller's job, not noise.
+                    clear_window()
+                    pending_structural = True
+                if applied is not None:
+                    oracle_dirty = True
+                continue
+
+            # ---- tick: run the batch, observe ----------------------------
+            rows = max(int(ev.rate), 1)
+            rep = eng.run_batch(rng.normal(size=(rows, cfg.row_width)))
+            observed = rep.true_latency         # the WORLD's true latency
+            modeled = self.com_scale * self._believed_latency(eng.x)
+            w_rates.append(ev.rate); w_busy.append(rep.device_busy.copy())
+            w_obs.append(observed); w_mod.append(modeled)
+            w_xs.append(eng.x.copy())
+            w_rin.append(np.asarray(rep.op_rows_in, dtype=np.float64))
+            w_rout.append(np.asarray(rep.op_rows_out, dtype=np.float64))
+            ticks_since_adapt += 1
+            if not np.isfinite(self.work_unit) \
+                    and len(w_obs) >= cfg.window:
+                # one-time unit calibration on the first full window, while
+                # the belief is still trusted — later refits anchor their
+                # slowdown estimates to this constant (fit_work_unit)
+                self.work_unit = fit_work_unit(
+                    self.believed_graph, self.believed,
+                    make_window(slice(None)))
+
+            # ---- regret accounting on the true world ---------------------
+            true_g = eng.true_graph()
+            if oracle_dirty:
+                oracle_x, oracle_dq = self._oracle_reoptimize(
+                    true_g, oracle_x, oracle_dq, [static_x, eng.x], rng)
+                oracle_dirty = False
+            charge = 0.0
+
+            # ---- drift watch → refit → re-optimize -----------------------
+            tail = slice(-cfg.window, None)
+            drift = normalized_drift(np.array(w_obs[tail]),
+                                     np.array(w_mod[tail]))
+            drift_series.append(drift)
+            triggered = (np.isfinite(drift)
+                         and drift > cfg.drift_threshold) \
+                or pending_structural
+            fast = (len(w_obs) >= 2 and np.isfinite(drift)
+                    and drift > cfg.fast_factor * cfg.drift_threshold)
+            if (ticks_since_adapt >= cfg.cooldown
+                    and ((len(w_obs) >= cfg.window and triggered) or fast)):
+                pending_structural = False
+                refit = refit_from_replay(self.believed_graph, self.believed,
+                                          make_window(tail), self.cost_cfg,
+                                          work_unit=self.work_unit)
+                if not np.isfinite(refit.post_drift) \
+                        or refit.post_drift <= refit.pre_drift:
+                    self.believed = refit.fleet
+                    self.com_scale = 1.0  # the refit folded the scale in
+                    if np.max(np.abs(refit.sel_scale - 1.0)) > 0.02:
+                        # material selectivity drift: adopt the re-fit graph
+                        # (the next re-optimization rebuilds its evaluator)
+                        self.believed_graph = refit.graph
+                    refit_ticks.append(ev.t)
+                x_new, dq_new, score_new, score_inc = self._reoptimize(rng)
+                # gate on the BELIEVED price (all the controller has); the
+                # regret account below charges the TRUE price of the move
+                cost = reconfiguration_cost(
+                    eng.x, x_new, self.graph, self.believed,
+                    cfg.state_bytes_per_op)
+                if (score_inc - score_new) * cfg.amortize_ticks > cost:
+                    if not np.array_equal(x_new, eng.x):
+                        charge = reconfiguration_cost(
+                            eng.x, x_new, self.graph, eng.fleet,
+                            cfg.state_bytes_per_op)
+                        reconfig_ticks.append(ev.t)
+                        oracle_dirty = True
+                    eng.x = x_new
+                    self.dq = dq_new
+                ticks_since_adapt = 0
+                clear_window()
+
+            f_static.append(self._true_F(true_g, static_x, cfg.dq))
+            f_adaptive.append(self._true_F(true_g, eng.x, self.dq))
+            f_oracle.append(self._true_F(true_g, oracle_x, oracle_dq))
+            charges.append(charge)
+
+        return RegretReport(
+            scenario=self.name,
+            f_static=np.array(f_static),
+            f_adaptive=np.array(f_adaptive),
+            f_oracle=np.array(f_oracle),
+            reconfig_costs=np.array(charges),
+            drift=np.array(drift_series),
+            reconfig_ticks=reconfig_ticks,
+            refit_ticks=refit_ticks,
+            n_refits=len(refit_ticks),
+            n_reconfigs=len(reconfig_ticks),
+            controller_dispatches=self.controller_dispatches,
+            oracle_dispatches=self.oracle_dispatches,
+            final_com_scale=self.com_scale)
+
+
+def run_adaptive(engine, trace: list[TraceEvent], rng: np.random.Generator,
+                 cfg: AdaptiveConfig = AdaptiveConfig(),
+                 name: str = "adaptive") -> RegretReport:
+    """Close the loop over one trace: observe → drift → refit → re-optimize
+    → reconfigure, with regret accounting against the static seed placement
+    and the per-world-change oracle.  One-call wrapper around
+    :class:`AdaptiveController`."""
+    return AdaptiveController(engine, cfg, name=name).run(trace, rng)

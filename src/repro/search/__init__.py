@@ -19,7 +19,8 @@ here and keep their signatures.
 
 from repro.search.candidates import (anneal_path, chunked,
                                      count_grid_states, dq_grid,
-                                     grid_placements, random_placements,
+                                     grid_placements, incumbent_candidates,
+                                     random_placements,
                                      transfer_neighborhood)
 from repro.search.decision import (ObjectiveScales, ParetoFront,
                                    candidate_values, dq_caps_mask,
@@ -33,7 +34,8 @@ from repro.search.searchers import (exhaustive_search, greedy_transfer,
 __all__ = [
     # layer 1 — candidates
     "anneal_path", "chunked", "count_grid_states", "dq_grid",
-    "grid_placements", "random_placements", "transfer_neighborhood",
+    "grid_placements", "incumbent_candidates", "random_placements",
+    "transfer_neighborhood",
     # layer 2 — batched scoring
     "BatchedProblem",
     # layer 3 — decision

@@ -40,6 +40,7 @@ __all__ = [
     "dq_grid",
     "grid_placements",
     "count_grid_states",
+    "incumbent_candidates",
     "random_placements",
     "transfer_neighborhood",
     "anneal_path",
@@ -117,6 +118,34 @@ def random_placements(avail: np.ndarray, rng: np.random.Generator, n: int,
     n_ops = avail.shape[0]
     return np.stack([random_placement(n_ops, avail, rng, sparsity)
                      for _ in range(n)])
+
+
+def incumbent_candidates(x: np.ndarray, avail: np.ndarray,
+                         rng: np.random.Generator, n: int,
+                         jitter: float = 0.25,
+                         sparsity: float = 0.5) -> np.ndarray:
+    """(n, n_ops, V) warm-start batch around an incumbent placement: the
+    incumbent itself FIRST (a re-optimization can therefore never regress —
+    first-occurrence argmin keeps it on ties), then ~half jittered copies
+    (simplex-renormalized mixtures of the incumbent with Dirichlet noise —
+    local moves for drift-chasing re-placement), then Dirichlet random
+    restarts (global escapes).  The shape of choice for closed-loop
+    re-optimization (:mod:`repro.adapt`), where the previous placement is
+    usually nearly right and the search budget is one dispatch."""
+    x = np.asarray(x, dtype=np.float64)
+    if n < 1:
+        raise ValueError(f"need n ≥ 1 candidates, got {n}")
+    out = [x]
+    n_local = (n - 1 + 1) // 2
+    for _ in range(n_local):
+        noise = random_placements(avail, rng, 1, 0.0)[0]
+        cand = (1.0 - jitter) * x + jitter * noise
+        mass = cand.sum(axis=1, keepdims=True)
+        out.append(np.divide(cand, mass, out=np.zeros_like(cand),
+                             where=mass > 0.0))
+    if len(out) < n:
+        out.extend(random_placements(avail, rng, n - len(out), sparsity))
+    return np.stack(out[:n])
 
 
 def transfer_neighborhood(x: np.ndarray, avail: np.ndarray, op: int,

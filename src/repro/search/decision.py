@@ -139,9 +139,17 @@ class ObjectiveScales:
         """Fit from an ObjectiveGrids — pooling every (scenario, candidate)
         cell; to fit from one scenario's slice or the worst-case envelope,
         pass ``candidate_values(grids, scenario)`` instead — or from a
-        plain (P, K) value matrix.  Degenerate objectives (constant over
-        the sample) get scale 1 — they then contribute exactly 0 to every
-        normalized scalarization, keeping invariance."""
+        plain (P, K) value matrix.
+
+        Degenerate grids are well-defined, never a zero divide: an
+        objective constant over the sample (max == min) gets scale 1 with
+        offset = that constant, so every normalized value is exactly 0 and
+        the objective contributes nothing to a normalized scalarization
+        (which keeps the scale-invariance property).  Non-finite cells
+        (±inf from feasibility masks, NaN) are ignored by the fit — and an
+        objective with NO finite cell at all normalizes through (offset 0,
+        scale 1), passing its ±inf through unchanged.  An empty sample
+        (zero rows) raises — there is nothing to fit."""
         if hasattr(grids_or_values, "grids"):
             names = tuple(grids_or_values.names)
             values = np.stack(
@@ -154,11 +162,17 @@ class ObjectiveScales:
                 raise ValueError(f"values must be 2-D, got {values.shape}")
             names = tuple(names) if names is not None else \
                 tuple(f"objective_{k}" for k in range(values.shape[1]))
-        finite = np.where(np.isfinite(values), values, np.nan)
-        lo = np.nanmin(finite, axis=0)
-        hi = np.nanmax(finite, axis=0)
-        lo = np.where(np.isnan(lo), 0.0, lo)
-        hi = np.where(np.isnan(hi), 0.0, hi)
+        if values.shape[0] == 0:
+            raise ValueError("cannot fit ObjectiveScales from an empty "
+                             "sample (zero rows)")
+        # explicit masked min/max — no all-NaN-slice RuntimeWarnings, no
+        # nan/0 ranges to divide by later
+        finite = np.isfinite(values)
+        any_finite = finite.any(axis=0)
+        lo = np.where(any_finite,
+                      np.min(np.where(finite, values, np.inf), axis=0), 0.0)
+        hi = np.where(any_finite,
+                      np.max(np.where(finite, values, -np.inf), axis=0), 0.0)
         span = hi - lo
         return cls(names=names, offset=lo,
                    scale=np.where(span > 0.0, span, 1.0))

@@ -64,6 +64,12 @@ class BatchedProblem:
     prob: PlacementProblem
     chunk: int = 4096
     use_pallas: bool = False
+    # an already-built evaluator to reuse (same graph/cfg): callers that
+    # re-solve the same problem shape against CHANGING fleets — the
+    # closed-loop controller re-optimizing after every recalibration — keep
+    # one evaluator so its jitted grid functions compile once, not per
+    # reconfiguration (the fleet pack is data, not part of the trace)
+    evaluator: BatchedEvaluator | None = None
 
     def __post_init__(self):
         self.evals = 0
@@ -71,8 +77,9 @@ class BatchedProblem:
         self.scalar_fallback = self.prob.cost_cfg.include_compute
         if self.scalar_fallback:
             return
-        self._ev = BatchedEvaluator(self.prob.graph, self.prob.cost_cfg,
-                                    use_pallas=self.use_pallas)
+        self._ev = self.evaluator if self.evaluator is not None else \
+            BatchedEvaluator(self.prob.graph, self.prob.cost_cfg,
+                             use_pallas=self.use_pallas)
         fleet = self.prob.fleet
         if isinstance(fleet, RegionFleet):
             self._pack = RegionFleetFamily.from_fleets([fleet])

@@ -4,8 +4,9 @@ the generators → batched eval → replay pipeline)."""
 
 from repro.sim.batched import (BatchedEvaluator, pack_fleets, pack_placements,
                                pack_region_fleets, pack_speeds)
-from repro.sim.replay import (ReplayReport, ReplayStep, replay_trace,
-                              robust_placement, scenario_robust_search)
+from repro.sim.replay import (ReplayReport, ReplayStep, apply_fleet_event,
+                              replay_trace, robust_placement,
+                              scenario_robust_search)
 from repro.sim.scenarios import (MIN_ALIVE_DEVICES, Scenario, ScenarioConfig,
                                  TraceEvent, diurnal_rate, perturbed_fleet,
                                  random_fleet, random_graph, random_scenario,
@@ -15,8 +16,8 @@ from repro.sim.scenarios import (MIN_ALIVE_DEVICES, Scenario, ScenarioConfig,
 __all__ = [
     "BatchedEvaluator", "pack_fleets", "pack_placements", "pack_region_fleets",
     "pack_speeds",
-    "ReplayReport", "ReplayStep", "replay_trace", "robust_placement",
-    "scenario_robust_search",
+    "ReplayReport", "ReplayStep", "apply_fleet_event", "replay_trace",
+    "robust_placement", "scenario_robust_search",
     "MIN_ALIVE_DEVICES", "Scenario", "ScenarioConfig", "TraceEvent",
     "diurnal_rate", "perturbed_fleet", "random_fleet", "random_graph",
     "random_scenario", "random_trace", "region_fleet_family",

@@ -27,8 +27,8 @@ from repro.core.graph import OpGraph
 from repro.core.objectives import ObjectiveSet
 from repro.sim.scenarios import MIN_ALIVE_DEVICES, Scenario, TraceEvent
 
-__all__ = ["ReplayStep", "ReplayReport", "replay_trace", "robust_placement",
-           "scenario_robust_search"]
+__all__ = ["ReplayStep", "ReplayReport", "apply_fleet_event", "replay_trace",
+           "robust_placement", "scenario_robust_search"]
 
 
 @dataclasses.dataclass
@@ -40,6 +40,10 @@ class ReplayStep:
     modeled_latency: float
     observed_busy: float  # max per-device busy seconds this tick
     n_devices: int
+    # full per-device busy vector this tick (V,) — what refit_from_replay
+    # fits effective speeds from; observed_busy above keeps the max for
+    # backward compatibility
+    device_busy: np.ndarray | None = None
 
 
 @dataclasses.dataclass
@@ -48,6 +52,8 @@ class ReplayReport:
     steps: list[ReplayStep]
     n_degrades: int
     n_removes: int
+    n_outages: int = 0
+    n_drifts: int = 0
 
     @property
     def modeled(self) -> np.ndarray:
@@ -56,6 +62,26 @@ class ReplayReport:
     @property
     def observed(self) -> np.ndarray:
         return np.array([s.observed_busy for s in self.steps])
+
+    @property
+    def rates(self) -> np.ndarray:
+        return np.array([s.rate for s in self.steps])
+
+    def busy_series(self) -> np.ndarray:
+        """(T, V) per-device busy matrix over the trailing run of ticks with
+        a constant device count (device losses change V mid-trace, so only
+        the suffix after the last removal stacks).  Empty (0, 0) when no
+        step recorded a device_busy vector."""
+        steps = [s for s in self.steps if s.device_busy is not None]
+        if not steps:
+            return np.zeros((0, 0))
+        v = steps[-1].n_devices
+        tail = []
+        for s in reversed(steps):
+            if s.n_devices != v:
+                break
+            tail.append(s.device_busy)
+        return np.stack(tail[::-1])
 
     def drift(self) -> dict:
         """Modeled-vs-observed latency drift over the trace.
@@ -75,6 +101,41 @@ class ReplayReport:
                 "n_ticks": int(keep.sum())}
 
 
+def apply_fleet_event(engine, ev: TraceEvent, alive: list[int],
+                      beta: float = 0.0,
+                      reoptimize: bool = True) -> str | None:
+    """Apply one non-tick trace event to the engine, remapping the event's
+    original-fleet device id through the ``alive`` list (mutated on
+    removals).  Returns the event kind when it was applied, None when it was
+    dropped (dead device, or a removal blocked by the
+    :data:`repro.sim.scenarios.MIN_ALIVE_DEVICES` floor).
+
+    Shared by :func:`replay_trace` (engine self-heals: ``reoptimize=True``)
+    and the closed-loop controller (:mod:`repro.adapt` passes
+    ``reoptimize=False`` — the controller owns re-placement)."""
+    if ev.kind == "degrade":
+        if ev.device not in alive:
+            return None
+        engine.apply_event("degrade", alive.index(ev.device),
+                           factor=ev.factor, beta=beta,
+                           reoptimize=reoptimize)
+        return ev.kind
+    if ev.kind == "remove":
+        if ev.device not in alive or len(alive) <= MIN_ALIVE_DEVICES:
+            return None
+        engine.apply_event("remove", alive.index(ev.device), beta=beta,
+                           reoptimize=reoptimize)
+        alive.remove(ev.device)
+        return ev.kind
+    if ev.kind in ("outage", "recover", "drift"):
+        # region ids (outage/recover) and operator ids (drift) survive
+        # removals unchanged — no remapping needed
+        engine.apply_event(ev.kind, ev.device, factor=ev.factor, beta=beta,
+                           reoptimize=reoptimize)
+        return ev.kind
+    raise ValueError(f"unknown trace event kind {ev.kind!r}")
+
+
 def replay_trace(engine, trace: list[TraceEvent], rng: np.random.Generator,
                  row_width: int = 4, beta: float = 0.0,
                  name: str = "scenario") -> ReplayReport:
@@ -87,9 +148,15 @@ def replay_trace(engine, trace: list[TraceEvent], rng: np.random.Generator,
     :data:`repro.sim.scenarios.MIN_ALIVE_DEVICES` (= 2) devices remain —
     the same invariant ``random_trace`` enforces at generation time, so
     hand-built traces (or traces replayed against a smaller fleet) can
-    never strand the engine below 2 devices either."""
+    never strand the engine below 2 devices either.
+
+    Beyond the classic per-device events, traces may carry the
+    time-correlated realism events ``outage`` / ``recover`` (whole-region
+    failures; counted in ``n_outages``) and ``drift`` (runtime selectivity
+    drift; counted in ``n_drifts``) — see
+    :func:`repro.sim.scenarios.random_trace`."""
     steps: list[ReplayStep] = []
-    n_deg = n_rem = 0
+    counts = {"degrade": 0, "remove": 0, "outage": 0, "drift": 0}
     alive = list(range(engine.fleet.n_devices))
     for ev in trace:
         if ev.kind in ("rate", "burst"):
@@ -100,22 +167,17 @@ def replay_trace(engine, trace: list[TraceEvent], rng: np.random.Generator,
                 t=ev.t, kind=ev.kind, rate=ev.rate, rows_in=rep.rows_in,
                 modeled_latency=rep.modeled_latency,
                 observed_busy=float(rep.device_busy.max(initial=0.0)),
-                n_devices=engine.fleet.n_devices))
-        elif ev.kind == "degrade":
-            if ev.device in alive:
-                engine.apply_event("degrade", alive.index(ev.device),
-                                   factor=ev.factor, beta=beta)
-                n_deg += 1
-        elif ev.kind == "remove":
-            if ev.device in alive and len(alive) > MIN_ALIVE_DEVICES:
-                engine.apply_event("remove", alive.index(ev.device),
-                                   beta=beta)
-                alive.remove(ev.device)
-                n_rem += 1
+                n_devices=engine.fleet.n_devices,
+                device_busy=rep.device_busy.copy()))
         else:
-            raise ValueError(f"unknown trace event kind {ev.kind!r}")
-    return ReplayReport(scenario=name, steps=steps, n_degrades=n_deg,
-                        n_removes=n_rem)
+            applied = apply_fleet_event(engine, ev, alive, beta=beta)
+            if applied in ("degrade", "remove", "outage", "drift"):
+                counts[applied] += 1
+    return ReplayReport(scenario=name, steps=steps,
+                        n_degrades=counts["degrade"],
+                        n_removes=counts["remove"],
+                        n_outages=counts["outage"],
+                        n_drifts=counts["drift"])
 
 
 def robust_placement(graph: OpGraph, scenarios: list[Scenario],

@@ -90,6 +90,22 @@ class ScenarioConfig:
     degrade_prob: float = 0.04
     degrade_factor: tuple[float, float] = (2.0, 8.0)
     loss_prob: float = 0.02
+    # Markov time-correlated whole-region outages WITHIN one trace: a healthy
+    # region enters outage with prob outage_on_prob per tick and stays out
+    # for a geometric duration (leaves with prob outage_off_prob per tick) —
+    # correlated failures over time, not independent per-tick coin flips.
+    # 0.0 (default) disables them AND leaves the rng stream of pre-existing
+    # traces untouched (seed-for-seed backward compatible).
+    outage_on_prob: float = 0.0
+    outage_off_prob: float = 0.25
+    trace_outage_factor: float = 32.0
+    # selectivity drift: each tick one random operator's TRUE selectivity
+    # takes a lognormal(0, selectivity_drift_std) random-walk step (clamped
+    # so the cumulative scale stays within selectivity_drift_bounds); the
+    # cost-model metadata goes stale until a controller recalibrates.
+    # 0.0 (default) disables it, preserving the pre-existing rng stream.
+    selectivity_drift_std: float = 0.0
+    selectivity_drift_bounds: tuple[float, float] = (0.25, 4.0)
     explicit_fleet: bool = True  # materialize ExplicitFleet (else RegionFleet)
     # structured (RegionFleetFamily) what-if knobs: per-scenario region-level
     # link jitter, independent device stragglers, and whole-region outages
@@ -104,13 +120,17 @@ class TraceEvent:
     """One tick of a workload trace.
 
     kind: "rate" (plain tick), "burst" (rate spike), "degrade" (device's
-    links/compute get ``factor``× slower), "remove" (device loss).
+    links/compute get ``factor``× slower), "remove" (device loss),
+    "outage" / "recover" (whole-REGION failure entering/lifting — ``device``
+    holds the region id and ``factor`` the degrade multiplier), "drift"
+    (operator ``device``'s TRUE selectivity scales by ``factor``; the cost
+    model's metadata is left stale).
     """
 
     t: int
     kind: str
     rate: float
-    device: int = -1
+    device: int = -1  # device id; region id for outage/recover; op for drift
     factor: float = 1.0
 
 
@@ -285,17 +305,42 @@ def diurnal_rate(t: int, cfg: ScenarioConfig = ScenarioConfig(),
 
 
 def random_trace(rng: np.random.Generator, n_devices: int,
-                 cfg: ScenarioConfig = ScenarioConfig()) -> list[TraceEvent]:
-    """A timed event sequence; at most one fleet event per tick.
+                 cfg: ScenarioConfig = ScenarioConfig(),
+                 n_regions: int | None = None,
+                 n_ops: int | None = None) -> list[TraceEvent]:
+    """A timed event sequence; at most one classic fleet event per tick.
 
     Removal floor: a ``remove`` is only emitted while MORE than
     :data:`MIN_ALIVE_DEVICES` devices are alive, so the fleet never drops
     below ``MIN_ALIVE_DEVICES`` (= 2) — the same invariant
     :func:`repro.sim.replay.replay_trace` enforces at replay time (a
-    regression test pins the 3-device boundary)."""
+    regression test pins the 3-device boundary).
+
+    Two correlated-over-time realism layers, both off by default (their
+    config knobs are 0.0, and disabled layers draw NOTHING from the rng, so
+    pre-existing seeds reproduce byte-identical traces):
+
+      * Markov whole-region outages (``cfg.outage_on_prob`` > 0, needs
+        ``n_regions``): each healthy region enters outage with
+        ``outage_on_prob`` per tick, emits ``outage`` (region id in
+        ``device``, ``trace_outage_factor`` in ``factor``), and leaves with
+        ``outage_off_prob`` per tick via a matching ``recover`` — geometric
+        outage durations, i.e. failures correlated over TIME.  At least one
+        region always stays healthy, and every open outage is closed by a
+        final recover so the trace ends on a healthy fleet.
+      * selectivity drift (``cfg.selectivity_drift_std`` > 0, needs
+        ``n_ops``): each tick one random operator takes a lognormal
+        random-walk step, clamped so the cumulative drift stays within
+        ``cfg.selectivity_drift_bounds``.
+    """
     phase = float(rng.uniform(0.0, 2.0 * math.pi))
     alive = list(range(n_devices))
     events: list[TraceEvent] = []
+    out_regions: set[int] = set()
+    sel_cum = None if n_ops is None else np.ones(n_ops)
+    markov = cfg.outage_on_prob > 0.0 and n_regions is not None \
+        and n_regions > 1
+    drifting = cfg.selectivity_drift_std > 0.0 and n_ops
     for t in range(cfg.trace_len):
         rate = diurnal_rate(t, cfg, phase)
         kind = "rate"
@@ -312,6 +357,39 @@ def random_trace(rng: np.random.Generator, n_devices: int,
                 t=t, kind="degrade", rate=0.0,
                 device=alive[int(rng.integers(len(alive)))],
                 factor=float(rng.uniform(*cfg.degrade_factor))))
+        if markov:
+            for r in sorted(out_regions):
+                if rng.random() < cfg.outage_off_prob:
+                    out_regions.discard(r)
+                    events.append(TraceEvent(
+                        t=t, kind="recover", rate=0.0, device=r,
+                        factor=cfg.trace_outage_factor))
+            for r in range(n_regions):
+                if r in out_regions:
+                    continue
+                # keep ≥1 healthy region so the optimizer has a refuge
+                if len(out_regions) >= n_regions - 1:
+                    break
+                if rng.random() < cfg.outage_on_prob:
+                    out_regions.add(r)
+                    events.append(TraceEvent(
+                        t=t, kind="outage", rate=0.0, device=r,
+                        factor=cfg.trace_outage_factor))
+        if drifting:
+            op = int(rng.integers(n_ops))
+            step = float(rng.lognormal(0.0, cfg.selectivity_drift_std))
+            lo, hi = cfg.selectivity_drift_bounds
+            clipped = float(np.clip(sel_cum[op] * step, lo, hi))
+            step = clipped / sel_cum[op]
+            sel_cum[op] = clipped
+            if step != 1.0:
+                events.append(TraceEvent(t=t, kind="drift", rate=0.0,
+                                         device=op, factor=step))
+    # close any outage still open, so replaying the whole trace returns the
+    # fleet to (degrade-)health and back-to-back traces compose
+    for r in sorted(out_regions):
+        events.append(TraceEvent(t=cfg.trace_len, kind="recover", rate=0.0,
+                                 device=r, factor=cfg.trace_outage_factor))
     return events
 
 
@@ -324,7 +402,9 @@ def random_scenario(rng: np.random.Generator,
                     name: str = "scenario") -> Scenario:
     g = graph if graph is not None else random_graph(rng, cfg)
     fleet = random_fleet(rng, cfg, n_devices=n_devices)
-    trace = random_trace(rng, fleet.n_devices, cfg)
+    trace = random_trace(rng, fleet.n_devices, cfg,
+                         n_regions=int(np.asarray(fleet.region).max()) + 1,
+                         n_ops=g.n_ops)
     return Scenario(name=name, graph=g, fleet=fleet, trace=trace)
 
 
@@ -361,6 +441,7 @@ def region_scenario_batch(rng: np.random.Generator, n_scenarios: int,
     fam = region_fleet_family(rng, n_scenarios, cfg, n_devices=n_devices)
     return [
         Scenario(name=f"region_scenario{k}", graph=g, fleet=fam.fleet(k),
-                 trace=random_trace(rng, fam.n_devices, cfg))
+                 trace=random_trace(rng, fam.n_devices, cfg,
+                                    n_regions=fam.n_regions, n_ops=g.n_ops))
         for k in range(n_scenarios)
     ]

@@ -1,0 +1,224 @@
+"""Closed-loop adaptive replay: the controller chases drift on a crafted
+trace, survives the replay edge cases (zero/one-tick traces, removal floor,
+back-to-back whole-region outages), keeps its dispatch count O(reconfigs),
+and is deterministic under a fixed seed."""
+
+import numpy as np
+import pytest
+
+from repro.adapt import (AdaptiveConfig, RegretReport, reconfiguration_cost,
+                         run_adaptive)
+from repro.core.placement import uniform_placement
+from repro.sim import MIN_ALIVE_DEVICES, ScenarioConfig, replay_trace
+from repro.sim.scenarios import TraceEvent, scenario_batch
+from repro.streaming.engine import StreamingEngine
+from repro.streaming.operators import StreamGraph, filter_op, map_op, source
+
+CFG = ScenarioConfig(trace_len=8, base_rate=32.0, n_regions=(3, 3),
+                     devices_per_region=(2, 2))
+CTL = AdaptiveConfig(window=3, cooldown=2, drift_threshold=0.3,
+                     amortize_ticks=8.0, n_candidates=32,
+                     oracle_candidates=16)
+
+
+def _stream_graph():
+    ops = [
+        source(),
+        map_op("normalize", lambda r: (r - r.mean()) / (r.std() + 1e-9)),
+        filter_op("threshold", lambda r: r[:, 0] > -0.5, selectivity=0.7),
+    ]
+    return StreamGraph(ops, [(0, 1), (1, 2)])
+
+
+def _engine(seed: int = 0, cfg: ScenarioConfig = CFG):
+    rng = np.random.default_rng(seed)
+    sg = _stream_graph()
+    s = scenario_batch(rng, 1, cfg, graph=sg.meta)[0]
+    x = uniform_placement(sg.meta.n_ops,
+                          np.ones((sg.meta.n_ops, s.n_devices), bool))
+    return StreamingEngine(sg, s.fleet, x, observed="work"), s
+
+
+def _rate_ticks(t0: int, n: int, rate: float = 32.0) -> list[TraceEvent]:
+    return [TraceEvent(t=t0 + k, kind="rate", rate=rate) for k in range(n)]
+
+
+def _outage_trace(region: int = 0, pre: int = 4, dwell: int = 14,
+                  post: int = 4, factor: float = 32.0) -> list[TraceEvent]:
+    """Healthy warmup, one long whole-region outage, recovery tail."""
+    return (_rate_ticks(0, pre)
+            + [TraceEvent(t=pre, kind="outage", rate=0.0, device=region,
+                          factor=factor)]
+            + _rate_ticks(pre, dwell)
+            + [TraceEvent(t=pre + dwell, kind="recover", rate=0.0,
+                          device=region, factor=factor)]
+            + _rate_ticks(pre + dwell, post))
+
+
+def test_adaptive_beats_static_on_drifting_trace():
+    """One long whole-region outage: the controller refits, re-places away
+    from the dead region, and ends with lower cumulative true F than the
+    static seed placement — reconfiguration charges included."""
+    eng, _ = _engine(0)
+    trace = _outage_trace(region=int(np.asarray(eng.fleet.region)[0]))
+    rep = run_adaptive(eng, trace, np.random.default_rng(1), CTL)
+    assert rep.n_ticks == 22
+    assert rep.n_reconfigs >= 1
+    assert rep.cum_adaptive < rep.cum_static
+    # the oracle is the hindsight floor of the three policies
+    assert rep.cum_oracle <= rep.cum_adaptive + 1e-6
+    assert rep.cum_oracle <= rep.cum_static + 1e-6
+    # charges only appear on reconfiguration ticks
+    assert (rep.reconfig_costs > 0).sum() <= rep.n_reconfigs
+
+
+def test_adaptive_dispatches_scale_with_reconfigs_not_ticks():
+    """Doubling the healthy tail adds ticks but no new drift: the dispatch
+    count stays bounded by adaptations, far below the tick count."""
+    eng, _ = _engine(0)
+    region = int(np.asarray(eng.fleet.region)[0])
+    rep_short = run_adaptive(eng, _outage_trace(region, post=4),
+                             np.random.default_rng(1), CTL)
+    eng2, _ = _engine(0)
+    rep_long = run_adaptive(eng2, _outage_trace(region, post=24),
+                            np.random.default_rng(1), CTL)
+    for rep in (rep_short, rep_long):
+        adaptations = rep.n_refits + rep.n_reconfigs
+        assert rep.controller_dispatches <= 2 * max(adaptations, 1)
+        assert rep.controller_dispatches <= rep.n_ticks / 2
+    # +20 quiet ticks must not add +20 dispatches
+    assert rep_long.controller_dispatches \
+        <= rep_short.controller_dispatches + 2
+
+
+def test_zero_length_trace_is_a_noop():
+    eng, _ = _engine(2)
+    rep = run_adaptive(eng, [], np.random.default_rng(0), CTL)
+    assert isinstance(rep, RegretReport)
+    assert rep.n_ticks == 0
+    assert rep.cum_static == rep.cum_adaptive == rep.cum_oracle == 0.0
+    assert rep.n_refits == rep.n_reconfigs == 0
+    assert rep.controller_dispatches == 0
+
+
+def test_one_tick_trace_no_refit_no_crash():
+    eng, _ = _engine(2)
+    rep = run_adaptive(eng, _rate_ticks(0, 1), np.random.default_rng(0), CTL)
+    assert rep.n_ticks == 1
+    assert rep.n_refits == 0 and rep.n_reconfigs == 0
+    assert rep.controller_dispatches == 0
+    assert np.isnan(rep.drift[0])  # one tick cannot carry a drift estimate
+
+
+def test_trace_hits_min_alive_floor_mid_adaptation():
+    """Removals interleaved with ticks drive a 3-device fleet to the
+    MIN_ALIVE_DEVICES floor while the controller is running: exactly one
+    removal lands, the rest are dropped, and the loop keeps going."""
+    cfg = ScenarioConfig(trace_len=4, n_regions=(3, 3),
+                         devices_per_region=(1, 1))
+    eng, s = _engine(3, cfg)
+    assert s.n_devices == 3
+    trace = _rate_ticks(0, 4)
+    for d in range(3):
+        trace.append(TraceEvent(t=4 + d, kind="remove", rate=0.0, device=d))
+        trace += _rate_ticks(5 + d, 2)
+    rep = run_adaptive(eng, trace, np.random.default_rng(0), CTL)
+    assert eng.fleet.n_devices == MIN_ALIVE_DEVICES == 2
+    assert eng.x.shape[1] == 2
+    assert rep.n_ticks == 10
+    assert np.isfinite(rep.f_adaptive).all()
+
+
+def test_back_to_back_region_outages_replay():
+    """Two whole-region outages in consecutive events (different regions),
+    then recoveries: replay applies and counts them, the engine's link
+    state composes and returns to the original after both recover."""
+    eng, _ = _engine(4)
+    regions = np.asarray(eng.fleet.region)
+    r0, r1 = int(regions[0]), int(regions[-1])
+    assert r0 != r1
+    com0 = np.asarray(eng.fleet.com_matrix()).copy()
+    trace = (_rate_ticks(0, 2)
+             + [TraceEvent(t=2, kind="outage", rate=0.0, device=r0,
+                           factor=16.0),
+                TraceEvent(t=2, kind="outage", rate=0.0, device=r1,
+                           factor=16.0)]
+             + _rate_ticks(2, 2)
+             + [TraceEvent(t=4, kind="recover", rate=0.0, device=r0,
+                           factor=16.0),
+                TraceEvent(t=4, kind="recover", rate=0.0, device=r1,
+                           factor=16.0)]
+             + _rate_ticks(4, 2))
+    rep = replay_trace(eng, trace, np.random.default_rng(0))
+    assert rep.n_outages == 2
+    assert len(rep.steps) == 6
+    np.testing.assert_allclose(np.asarray(eng.fleet.com_matrix()), com0,
+                               rtol=1e-9)
+
+
+def test_back_to_back_region_outages_through_controller():
+    """The same back-to-back outage pattern through the adaptive loop: no
+    crash, finite regret series, and the belief-side machinery survives a
+    window where BOTH outaged regions carry mass."""
+    eng, _ = _engine(4)
+    regions = np.asarray(eng.fleet.region)
+    r0, r1 = int(regions[0]), int(regions[-1])
+    trace = (_rate_ticks(0, 4)
+             + [TraceEvent(t=4, kind="outage", rate=0.0, device=r0,
+                           factor=16.0),
+                TraceEvent(t=4, kind="outage", rate=0.0, device=r1,
+                           factor=16.0)]
+             + _rate_ticks(4, 8)
+             + [TraceEvent(t=12, kind="recover", rate=0.0, device=r0,
+                           factor=16.0),
+                TraceEvent(t=12, kind="recover", rate=0.0, device=r1,
+                           factor=16.0)]
+             + _rate_ticks(12, 4))
+    rep = run_adaptive(eng, trace, np.random.default_rng(0), CTL)
+    assert rep.n_ticks == 16
+    assert np.isfinite(rep.f_adaptive).all()
+    assert np.isfinite(rep.f_static).all()
+    assert rep.cum_oracle <= rep.cum_static + 1e-6
+
+
+def test_controller_is_deterministic_under_fixed_seed():
+    """Same engine seed + same controller rng seed ⇒ identical decisions
+    and regret series across two runs (guards the observed='work' busy
+    accounting and every random draw in the loop)."""
+    reps = []
+    for _ in range(2):
+        eng, _ = _engine(5)
+        trace = _outage_trace(region=int(np.asarray(eng.fleet.region)[0]))
+        reps.append(run_adaptive(eng, trace, np.random.default_rng(9), CTL))
+    a, b = reps
+    assert a.reconfig_ticks == b.reconfig_ticks
+    assert a.refit_ticks == b.refit_ticks
+    np.testing.assert_array_equal(a.f_adaptive, b.f_adaptive)
+    np.testing.assert_array_equal(a.f_static, b.f_static)
+    np.testing.assert_array_equal(a.f_oracle, b.f_oracle)
+    np.testing.assert_array_equal(a.reconfig_costs, b.reconfig_costs)
+    assert a.controller_dispatches == b.controller_dispatches
+
+
+def test_reconfiguration_cost_properties():
+    from repro.core.devices import ExplicitFleet
+    from repro.core.graph import Operator, OpGraph
+
+    g = OpGraph([Operator("a", out_bytes=2.0), Operator("b", out_bytes=4.0)],
+                [(0, 1)])
+    com = np.array([[0.0, 1.0, 5.0],
+                    [1.0, 0.0, 2.0],
+                    [5.0, 2.0, 0.0]])
+    fleet = ExplicitFleet(com_cost=com)
+    x = np.array([[1.0, 0.0, 0.0], [0.0, 1.0, 0.0]])
+    assert reconfiguration_cost(x, x, g, fleet) == 0.0
+    # moving op a's mass 0→1 prices com[0,1]=1 × bytes 2
+    x2 = np.array([[0.0, 1.0, 0.0], [0.0, 1.0, 0.0]])
+    assert reconfiguration_cost(x, x2, g, fleet) == pytest.approx(2.0)
+    # greedy routing prefers the cheap destination: half the mass must go
+    # somewhere, and 0→1 (cost 1) is picked before 0→2 (cost 5)
+    x3 = np.array([[0.0, 0.5, 0.5], [0.0, 1.0, 0.0]])
+    assert reconfiguration_cost(x, x3, g, fleet) == \
+        pytest.approx(2.0 * (0.5 * 1.0 + 0.5 * 5.0))
+    with pytest.raises(ValueError):
+        reconfiguration_cost(x, x[:, :2], g, fleet)

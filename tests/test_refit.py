@@ -1,0 +1,194 @@
+"""refit_from_replay recovers synthetic ground truth: traces generated from
+a fleet with KNOWN com-scale/speed perturbations re-fit to the known
+parameters, and the refit belief explains the window better than the stale
+one (property-tested via hypothesis or the repro.testing.propcheck shim)."""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from repro.testing.propcheck import given, settings, strategies as st
+
+from repro.core.calibration import (ReplayWindow, fit_work_unit,
+                                    normalized_drift, refit_from_replay)
+from repro.core.costmodel import latency
+from repro.core.devices import ExplicitFleet
+from repro.core.graph import Operator, OpGraph
+
+
+def _chain_graph(n_ops: int, sel: float = 1.2, work: float = 0.5) -> OpGraph:
+    ops = [Operator(f"op{i}", selectivity=sel, work=work)
+           for i in range(n_ops)]
+    return OpGraph(ops, [(i, i + 1) for i in range(n_ops - 1)])
+
+
+def _base_fleet(rng: np.random.Generator, v: int) -> ExplicitFleet:
+    com = rng.uniform(0.5, 2.0, (v, v))
+    com = (com + com.T) / 2.0
+    np.fill_diagonal(com, 0.0)
+    return ExplicitFleet(com_cost=com)
+
+
+def _window_from_truth(rng, graph, v, d_true, com_scale, base,
+                       t_ticks: int = 10, work_unit: float = 1e-6):
+    """Synthesize the observations the TRUE world (degrade d_true, com
+    scaled by com_scale) would emit under the occupancy/latency models."""
+    true_com = base.com_cost * np.outer(d_true, d_true) * com_scale
+    np.fill_diagonal(true_com, 0.0)
+    true_fleet = ExplicitFleet(com_cost=true_com, speed=1.0 / d_true)
+    xs = np.stack([rng.dirichlet(np.ones(v), size=graph.n_ops)
+                   for _ in range(t_ticks)])
+    rates = rng.uniform(50.0, 300.0, t_ticks)
+    cum = graph.cumulative_rates()
+    wk = np.array([op.work * cum[i]
+                   for i, op in enumerate(graph.operators)])
+    busy = work_unit * np.einsum("i,tiu->tu", wk, xs) \
+        * rates[:, None] * d_true[None, :]
+    obs = np.array([latency(graph, true_fleet, x) for x in xs])
+    return ReplayWindow(rates=rates, busy=busy, observed_latency=obs, xs=xs)
+
+
+@settings(max_examples=15)
+@given(seed=st.integers(0, 10_000),
+       v=st.integers(4, 8),
+       factor=st.floats(2.0, 20.0),
+       com_scale=st.floats(1.3, 3.0))
+def test_refit_recovers_ground_truth(seed, v, factor, com_scale):
+    """Known single-straggler degrade + global com scale → both recovered
+    within tolerance, and post-refit drift < pre-refit drift (≈ 0: the
+    synthetic world IS the model family)."""
+    rng = np.random.default_rng(seed)
+    graph = _chain_graph(4)
+    base = _base_fleet(rng, v)
+    d_true = np.ones(v)
+    d_true[int(rng.integers(v))] = factor
+    window = _window_from_truth(rng, graph, v, d_true, com_scale, base)
+    refit = refit_from_replay(graph, base, window)
+    np.testing.assert_allclose(refit.degrade, d_true, rtol=0.1)
+    assert refit.com_scale == pytest.approx(com_scale, rel=0.1)
+    assert refit.pre_drift > refit.post_drift
+    assert refit.post_drift < 0.05
+    # the refit fleet reproduces the observed latencies
+    relat = np.array([latency(graph, refit.fleet, x) for x in window.xs])
+    np.testing.assert_allclose(relat, window.observed_latency, rtol=2e-2)
+
+
+def test_refit_uniform_slowdown_needs_work_unit_anchor():
+    """A fleet-wide uniform slowdown is invisible to the self-anchored
+    (median) fit but recovered when the busy unit was calibrated on a
+    healthy window first — the reason the controller stores work_unit."""
+    rng = np.random.default_rng(3)
+    graph = _chain_graph(4)
+    v = 6
+    base = _base_fleet(rng, v)
+    healthy = _window_from_truth(rng, graph, v, np.ones(v), 1.0, base,
+                                 work_unit=1e-6)
+    wu = fit_work_unit(graph, base, healthy)
+    assert wu == pytest.approx(1e-6, rel=0.05)
+    d_true = np.full(v, 8.0)  # every device slows 8×
+    drifted = _window_from_truth(rng, graph, v, d_true, 1.0, base,
+                                 work_unit=1e-6)
+    blind = refit_from_replay(graph, base, drifted)
+    np.testing.assert_allclose(blind.degrade, 1.0, rtol=0.05)  # invisible
+    anchored = refit_from_replay(graph, base, drifted, work_unit=wu)
+    np.testing.assert_allclose(anchored.degrade, 8.0, rtol=0.1)
+
+
+def test_refit_region_pooling_covers_blind_devices():
+    """A device with no placement mass emits no busy signal; its degrade
+    estimate must be inherited from its region-mates (outages take whole
+    regions down — dumping mass on the blind device would be a trap)."""
+    rng = np.random.default_rng(4)
+    graph = _chain_graph(3)
+    v = 6
+    base = _base_fleet(rng, v)
+    base = ExplicitFleet(com_cost=base.com_cost,
+                         region=np.array([0, 0, 0, 1, 1, 1]))
+    d_true = np.array([1.0, 1.0, 1.0, 16.0, 16.0, 16.0])
+    window = _window_from_truth(rng, graph, v, d_true, 1.0, base)
+    # blind device 5: zero mass in every placement ⇒ zero busy signal
+    xs = window.xs.copy()
+    xs[:, :, 5] = 0.0
+    xs = xs / xs.sum(axis=2, keepdims=True)
+    cum = graph.cumulative_rates()
+    wk = np.array([op.work * cum[i]
+                   for i, op in enumerate(graph.operators)])
+    busy = 1e-6 * np.einsum("i,tiu->tu", wk, xs) \
+        * window.rates[:, None] * d_true[None, :]
+    obs = np.array([latency(graph, ExplicitFleet(
+        com_cost=base.com_cost * np.outer(d_true, d_true)
+        * (1 - np.eye(v))), x) for x in xs])
+    window = ReplayWindow(rates=window.rates, busy=busy,
+                          observed_latency=obs, xs=xs)
+    refit = refit_from_replay(graph, base, window)
+    assert refit.degrade[5] == pytest.approx(16.0, rel=0.15)
+
+
+def test_refit_selectivity_from_row_counters():
+    """With per-op row counters the refit graph carries the observed
+    selectivities, not the nominal ones."""
+    graph = _chain_graph(3, sel=1.0, work=0.5)
+    v, t = 4, 6
+    rng = np.random.default_rng(5)
+    base = _base_fleet(rng, v)
+    xs = np.stack([rng.dirichlet(np.ones(v), size=3) for _ in range(t)])
+    rates = np.full(t, 100.0)
+    rows_in = np.stack([[100.0, 100.0, 50.0]] * t)   # op1 drifted to s=0.5
+    rows_out = np.stack([[100.0, 50.0, 50.0]] * t)
+    cumw = np.array([0.5, 0.5, 0.5])
+    busy = 1e-6 * np.einsum("ti,tiu->tu", rows_in * cumw[None, :], xs)
+    obs = np.array([latency(graph, base, x) for x in xs])
+    window = ReplayWindow(rates=rates, busy=busy, observed_latency=obs,
+                          xs=xs, op_rows_in=rows_in, op_rows_out=rows_out)
+    refit = refit_from_replay(graph, base, window)
+    assert refit.sel_scale[1] == pytest.approx(0.5, rel=1e-6)
+    assert refit.graph.operators[1].selectivity == pytest.approx(0.5)
+    assert refit.sel_scale[0] == pytest.approx(1.0)
+
+
+def test_refit_rejects_tiny_windows():
+    rng = np.random.default_rng(6)
+    graph = _chain_graph(3)
+    base = _base_fleet(rng, 4)
+    w = _window_from_truth(rng, graph, 4, np.ones(4), 1.0, base, t_ticks=1)
+    with pytest.raises(ValueError, match="≥2 ticks"):
+        refit_from_replay(graph, base, w)
+
+
+def test_normalized_drift_basics():
+    obs = np.array([2.0, 2.0, 2.0])
+    assert normalized_drift(obs, obs) == 0.0
+    assert normalized_drift(obs, obs / 2.0) == pytest.approx(1.0)
+    assert np.isnan(normalized_drift(np.array([1.0]), np.array([1.0])))
+
+
+def test_window_from_plain_replay_report():
+    """The no-controller path: replay a trace, lift the window straight off
+    the ReplayReport (trailing constant-V suffix, max-busy latency proxy),
+    and refit without error."""
+    from repro.sim import ScenarioConfig, replay_trace, scenario_batch
+    from repro.streaming.engine import StreamingEngine
+    from repro.streaming.operators import (StreamGraph, filter_op, map_op,
+                                           source)
+    from repro.core.placement import uniform_placement
+
+    rng = np.random.default_rng(9)
+    ops = [source(),
+           map_op("normalize", lambda r: r - r.mean()),
+           filter_op("keep", lambda r: r[:, 0] > 0.0, selectivity=0.5)]
+    sg = StreamGraph(ops, [(0, 1), (1, 2)])
+    cfg = ScenarioConfig(trace_len=6, base_rate=24.0, loss_prob=0.0,
+                         degrade_prob=0.0)
+    s = scenario_batch(rng, 1, cfg, graph=sg.meta)[0]
+    x = uniform_placement(sg.meta.n_ops,
+                          np.ones((sg.meta.n_ops, s.n_devices), bool))
+    eng = StreamingEngine(sg, s.fleet, x, observed="work")
+    report = replay_trace(eng, s.trace, rng)
+    window = ReplayWindow.from_report(report, x)
+    assert window.n_ticks == 6
+    assert window.busy.shape == (6, s.n_devices)
+    refit = refit_from_replay(sg.meta, s.fleet, window)
+    assert np.isfinite(refit.com_scale) and refit.com_scale > 0.0
+    assert refit.degrade.shape == (s.n_devices,)

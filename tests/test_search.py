@@ -232,3 +232,38 @@ def test_greedy_restart_keeps_incumbent_dq():
     restart = greedy_transfer(prob, x0=first.x, dq0=incumbent_dq)
     base = prob.score(first.x, incumbent_dq)
     assert restart.F <= base + 1e-9
+
+
+def test_scales_fit_degenerate_grid_is_guarded():
+    """A degenerate grid (max == min for an objective) never yields a zero
+    range: the scale is 1, every normalized value of that objective is
+    EXACTLY 0 (so it contributes nothing to a normalized scalarization),
+    +inf feasibility masks pass through, and nothing warns."""
+    import warnings
+
+    values = np.array([[1.0, 7.0, np.inf],
+                       [2.0, 7.0, np.inf],
+                       [3.0, 7.0, np.inf]])
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # all-NaN-slice etc. would fail here
+        scales = ObjectiveScales.fit(values)
+    assert (scales.scale > 0.0).all()
+    normed = scales.apply(values)
+    assert np.all(normed[:, 1] == 0.0)          # degenerate → exactly 0
+    assert np.all(np.isinf(normed[:, 2]))       # inf flags survive
+    # a degenerate objective cannot flip a weighted selection
+    from repro.search import scalarize
+    s01 = ObjectiveScales.fit(values[:, :2])
+    ranks = np.argsort(scalarize(values[:, :2], [1.0, 1.0], scales=s01))
+    assert ranks.tolist() == [0, 1, 2]
+    # degenerate column mixed with one infeasible cell: offset comes from
+    # the finite entries, the constant still normalizes to 0
+    mixed = np.array([[5.0], [5.0], [np.inf]])
+    s2 = ObjectiveScales.fit(mixed)
+    out = s2.apply(mixed)
+    assert out[0, 0] == 0.0 and out[1, 0] == 0.0 and np.isinf(out[2, 0])
+
+
+def test_scales_fit_empty_sample_raises():
+    with pytest.raises(ValueError, match="empty"):
+        ObjectiveScales.fit(np.zeros((0, 2)))

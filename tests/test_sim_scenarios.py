@@ -135,3 +135,86 @@ def test_scenario_batch_stacks():
     # fleets actually differ across the family
     assert not np.allclose(batch[0].fleet.com_matrix(),
                            batch[1].fleet.com_matrix())
+
+
+# -- time-correlated realism: Markov outages + selectivity drift --------------
+
+REALISM = ScenarioConfig(trace_len=60, outage_on_prob=0.1,
+                         outage_off_prob=0.25, selectivity_drift_std=0.2,
+                         loss_prob=0.05, degrade_prob=0.05)
+
+
+def test_random_trace_markov_outage_structure():
+    """Outages are a region-level Markov chain: every outage eventually
+    recovers (trace ends healthy), at most one outage is open per region,
+    and at least one region stays healthy at all times."""
+    rng = np.random.default_rng(7)
+    n_regions = 3
+    trace = random_trace(rng, 8, REALISM, n_regions=n_regions, n_ops=4)
+    open_out = set()
+    saw_outage = False
+    for ev in trace:
+        if ev.kind == "outage":
+            saw_outage = True
+            assert ev.device not in open_out
+            assert 0 <= ev.device < n_regions
+            open_out.add(ev.device)
+            assert len(open_out) < n_regions  # ≥1 healthy region always
+            assert ev.factor == REALISM.trace_outage_factor
+        elif ev.kind == "recover":
+            assert ev.device in open_out
+            open_out.discard(ev.device)
+    assert saw_outage  # the knobs above make one overwhelmingly likely
+    assert not open_out  # every outage closed by trace end
+
+
+def test_random_trace_selectivity_drift_bounded():
+    """Drift steps are per-op multiplicative random walks whose cumulative
+    product stays within the configured bounds."""
+    rng = np.random.default_rng(8)
+    n_ops = 3
+    trace = random_trace(rng, 6, REALISM, n_regions=2, n_ops=n_ops)
+    drifts = [e for e in trace if e.kind == "drift"]
+    assert drifts
+    cum = np.ones(n_ops)
+    lo, hi = REALISM.selectivity_drift_bounds
+    for ev in drifts:
+        assert 0 <= ev.device < n_ops
+        cum[ev.device] *= ev.factor
+        assert lo - 1e-9 <= cum[ev.device] <= hi + 1e-9
+
+
+def test_random_trace_deterministic_same_seed():
+    """Same seed ⇒ byte-identical traces, with every realism layer on
+    (guards the Markov-outage and selectivity-drift generators)."""
+    t1 = random_trace(np.random.default_rng(11), 8, REALISM,
+                      n_regions=3, n_ops=4)
+    t2 = random_trace(np.random.default_rng(11), 8, REALISM,
+                      n_regions=3, n_ops=4)
+    assert t1 == t2  # TraceEvent is a frozen dataclass — exact equality
+
+
+def test_random_trace_defaults_leave_rng_stream_unchanged():
+    """The realism layers are opt-in: with default (0.0) knobs the trace —
+    and therefore everything drawn after it from the same rng — matches
+    what the pre-Markov generator produced."""
+    cfg = ScenarioConfig(trace_len=30)
+    r1, r2 = np.random.default_rng(13), np.random.default_rng(13)
+    base = random_trace(r1, 6, cfg)
+    with_args = random_trace(r2, 6, cfg, n_regions=4, n_ops=5)
+    assert base == with_args
+    assert r1.random() == r2.random()  # identical stream positions
+
+
+def test_region_scenario_batch_deterministic_same_seed():
+    from repro.sim import region_scenario_batch
+
+    cfg = ScenarioConfig(trace_len=12, outage_on_prob=0.1,
+                         selectivity_drift_std=0.2, explicit_fleet=False)
+    b1 = region_scenario_batch(np.random.default_rng(17), 3, cfg)
+    b2 = region_scenario_batch(np.random.default_rng(17), 3, cfg)
+    for s1, s2 in zip(b1, b2):
+        np.testing.assert_array_equal(s1.fleet.inter, s2.fleet.inter)
+        np.testing.assert_array_equal(s1.fleet.degrade_or_ones(),
+                                      s2.fleet.degrade_or_ones())
+        assert s1.trace == s2.trace
