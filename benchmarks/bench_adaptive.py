@@ -26,7 +26,6 @@ Usage:
 import argparse
 import json
 import sys
-import time
 from pathlib import Path
 
 import numpy as np
@@ -36,6 +35,7 @@ from repro.core.calibration import (ReplayWindow, normalized_drift,
                                     refit_from_replay)
 from repro.core.costmodel import latency
 from repro.core.placement import uniform_placement
+from repro.obs import bench as obench
 from repro.sim import ScenarioConfig, scenario_batch
 from repro.sim.scenarios import random_trace
 from repro.streaming.engine import StreamingEngine
@@ -83,11 +83,12 @@ def _run_family(seeds: int, trace_len: int) -> list[dict]:
     rows = []
     for seed in range(seeds):
         eng, trace = _drifting_scenario(seed, trace_len)
-        t0 = time.perf_counter()
-        rep = run_adaptive(eng, trace, np.random.default_rng(seed + 100),
-                           CONTROLLER, name=f"drift{seed}")
-        rows.append(dict(seed=seed, seconds=time.perf_counter() - t0,
-                         **rep.summary()))
+        seconds, rep = obench.time_once(
+            lambda: run_adaptive(eng, trace,
+                                 np.random.default_rng(seed + 100),
+                                 CONTROLLER, name=f"drift{seed}"),
+            block=False)
+        rows.append(dict(seed=seed, seconds=seconds, **rep.summary()))
     return rows
 
 

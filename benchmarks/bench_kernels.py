@@ -2,21 +2,17 @@
 timings on CPU (real TPU timings are out of scope in this container — the
 roofline analysis covers the performance story)."""
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops, ref
+from repro.obs import bench as obench
 
 
 def _time(f, n=3):
-    jax.block_until_ready(f())
-    t0 = time.perf_counter()
-    for _ in range(n):
-        jax.block_until_ready(f())
-    return (time.perf_counter() - t0) / n * 1e6
+    """Mean microseconds per call (shared harness: repro.obs.bench)."""
+    return obench.measure(f, n=n).mean_s * 1e6
 
 
 def run() -> list[str]:

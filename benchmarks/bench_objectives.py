@@ -24,7 +24,6 @@ Usage:
 import argparse
 import json
 import sys
-import time
 from pathlib import Path
 
 import numpy as np
@@ -32,6 +31,7 @@ import numpy as np
 from repro.core import ObjectiveSet, OBJECTIVES
 from repro.core.graph import linear_graph
 from repro.core.placement import random_placement
+from repro.obs import bench as obench
 from repro.sim import (BatchedEvaluator, ScenarioConfig, pack_fleets,
                        pack_placements, pack_speeds, region_fleet_family)
 
@@ -55,14 +55,9 @@ DENSE_MAX_V = 1024  # past this the (S, V, V) pack dwarfs memory
 
 def _time(f, n=5):
     """(median seconds, last result) — median over n reps so one noisy CI
-    rep can't flip the --check gate."""
-    out = f()  # warm (jit compile)
-    times = []
-    for _ in range(n):
-        t0 = time.perf_counter()
-        out = f()
-        times.append(time.perf_counter() - t0)
-    return float(np.median(times)), out
+    rep can't flip the --check gate (shared harness: repro.obs.bench)."""
+    t = obench.measure(f, n=n, block=False)
+    return t.seconds, t.result
 
 
 def _instance(rng, v: int, n_placements: int):

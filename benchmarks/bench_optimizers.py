@@ -1,14 +1,13 @@
 """Placement-optimizer comparison (paper §2 tractability: the problems are
 NP-hard, so the deliverable is heuristic quality-vs-time) on a geo fleet."""
 
-import time
-
 import numpy as np
 
 from repro.core import (CostConfig, DQCoupling, ExplicitFleet,
                         PlacementProblem, greedy_transfer, projected_gradient,
                         random_dag, random_search, simulated_annealing,
                         uniform_placement)
+from repro.obs import bench as obench
 
 
 def _instance(seed=0, n_ops=8, n_dev=8, n_regions=3):
@@ -41,11 +40,10 @@ def run() -> list[str]:
         ("random_search", lambda: random_search(prob, rng,
                                                 n_candidates=1024)),
     ]:
-        t0 = time.perf_counter()
-        res = fn()
-        dt = (time.perf_counter() - t0) * 1e6
+        seconds, res = obench.time_once(fn, block=False)
+        dt = seconds * 1e6
         rows.append(
             f"optimizer_{name},{dt:.0f},F={res.F:.4f};dq={res.dq_fraction:.2f};"
             f"improvement_vs_uniform={(uni_F - res.F) / uni_F:.1%};"
-            f"evals={res.evals}")
+            f"evals={res.evals};dispatches={res.dispatches}")
     return rows

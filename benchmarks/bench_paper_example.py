@@ -1,10 +1,9 @@
 """Paper §3 worked example (Tables 3–4): correctness + evaluation speed."""
 
-import time
-
 import numpy as np
 
 from repro.core import ExplicitFleet, latency, linear_graph, objective_F
+from repro.obs import bench as obench
 
 COM = np.array([[0.0, 1.5, 2.0], [1.5, 0.0, 1.0], [2.0, 1.0, 0.0]])
 X0 = np.array([[0.8, 0.2, 0.0], [0.7, 0.0, 0.3], [0.3, 0.4, 0.3]])
@@ -24,10 +23,9 @@ def run() -> list[str]:
         "F_beta2": (objective_F(lat0, 0.5, 2.0), objective_F(lat1, 1.0, 2.0)),
     }
     n = 2000
-    t0 = time.perf_counter()
-    for _ in range(n):
-        latency(g, fleet, X0)
-    us = (time.perf_counter() - t0) / n * 1e6
+    t = obench.measure(lambda: latency(g, fleet, X0), n=n, warmup=1,
+                       block=False)
+    us = t.mean_s * 1e6
     rows = [f"paper_example_eval,{us:.2f},latency0={lat0:.4f};latency1={lat1:.4f}"]
     rows.append(
         "paper_example_F,%0.2f,F(b1)=%.4f/%.4f;F(b2)=%.4f/%.4f" % (

@@ -3,28 +3,24 @@ latency vs (operators × devices), explicit vs region-structured fleets —
 the paper's fleet sizes (10⁵ devices) must be scorable interactively for
 any optimizer to work at that scale."""
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (RegionFleet, ExplicitFleet, latency, make_latency_fn,
                         random_dag, random_placement)
+from repro.obs import bench as obench
 
 
 def _time(f, n=5):
-    f()  # warm
-    t0 = time.perf_counter()
-    for _ in range(n):
-        f()
-    return (time.perf_counter() - t0) / n * 1e6
+    """Mean microseconds per warm call (shared harness: repro.obs.bench;
+    results are host floats, so no device block)."""
+    return obench.measure(f, n=n, block=False).mean_s * 1e6
 
 
 def _time_once(f):
-    t0 = time.perf_counter()
-    f()
-    return (time.perf_counter() - t0) * 1e6
+    """One cold call in microseconds (compile cost included by design)."""
+    return obench.time_once(f, block=False)[0] * 1e6
 
 
 def run() -> list[str]:

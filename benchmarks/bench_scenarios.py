@@ -5,12 +5,12 @@ candidates-scored-per-second and the batched-vs-scalar speedup (the ISSUE's
 ≥10× acceptance gate)."""
 
 import json
-import time
 from pathlib import Path
 
 import numpy as np
 
 from repro.core import latency, objective_F, random_placement
+from repro.obs import bench as obench
 from repro.sim import (BatchedEvaluator, ScenarioConfig, pack_fleets,
                        pack_placements, scenario_batch)
 
@@ -18,11 +18,8 @@ OUT_PATH = Path("BENCH_scenarios.json")
 
 
 def _time(f, n=5):
-    f()  # warm (jit compile)
-    t0 = time.perf_counter()
-    for _ in range(n):
-        f()
-    return (time.perf_counter() - t0) / n
+    """Mean seconds per warm call (shared harness: repro.obs.bench)."""
+    return obench.measure(f, n=n, block=False).mean_s
 
 
 def run() -> list[str]:

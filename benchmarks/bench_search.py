@@ -28,7 +28,6 @@ import argparse
 import json
 import math
 import sys
-import time
 from pathlib import Path
 
 import numpy as np
@@ -37,6 +36,8 @@ from repro.core import (ExplicitFleet, PlacementProblem, RegionFleet,
                         linear_graph)
 from repro.core.optimizers import DQCoupling, OptResult, _dq_grid
 from repro.core.placement import random_placement, uniform_placement
+from repro.obs import bench as obench
+from repro.obs import jaxhooks, perfbridge
 from repro.search import (BatchedProblem, exhaustive_search, greedy_transfer,
                           random_search)
 
@@ -56,9 +57,20 @@ SMOKE = dict(v_dense=64, p_random=384, v_structured=4096, p_structured=64,
 
 
 def _time(f):
-    t0 = time.perf_counter()
-    out = f()
-    return time.perf_counter() - t0, out
+    """One-shot (seconds, result) via the shared harness
+    (:func:`repro.obs.bench.time_once`); results here are host-side
+    OptResults, so no extra block is needed."""
+    return obench.time_once(f, block=False)
+
+
+def _timed_batched(run_b):
+    """Time a WARM batched searcher, surfacing recompiles inside the timed
+    region (should be 0 — a nonzero count is a silent shape-bucket miss
+    the telemetry layer exists to catch)."""
+    snap = jaxhooks.snapshot()
+    seconds, res = obench.time_once(run_b, block=False)
+    n_rec, _ = snap.delta()
+    return seconds, res, n_rec
 
 
 def _dense_problem(rng, v: int, coupling: bool = True) -> PlacementProblem:
@@ -164,13 +176,34 @@ def _rel_diff(a: float, b: float) -> float:
     return abs(a - b) / max(abs(a), abs(b), 1e-12)
 
 
-def _row(name, scalar_s, batched_s, res_scalar, res_batched, gated, **extra):
+def _row(name, scalar_s, batched_s, res_scalar, res_batched, gated,
+         n_recompiles=0, **extra):
     return dict(name=name, seconds_scalar=scalar_s, seconds_batched=batched_s,
                 speedup=scalar_s / max(batched_s, 1e-12),
                 evals=res_batched.evals, dispatches=res_batched.dispatches,
                 F_scalar=res_scalar.F, F_batched=res_batched.F,
                 rel_objective_diff=_rel_diff(res_scalar.F, res_batched.F),
-                gated=gated, **extra)
+                gated=gated, n_recompiles=n_recompiles, **extra)
+
+
+def _hlo_fields(eng: BatchedProblem, n_placements: int) -> dict:
+    """repro.perf bridge: FLOPs/bytes/roofline of ONE dense grid dispatch
+    at this benchmark's warmed shape (pads to the searcher's bucket)."""
+    from repro.sim.batched import pack_placements
+
+    bucket = 1 << max(n_placements - 1, 0).bit_length()
+    avail = eng.prob.availability()
+    xs = [uniform_placement(avail.shape[0], avail)] * bucket
+    placements = pack_placements(xs)
+    f = lambda: eng._ev._jit_grid(placements, eng._pack, 0.0, 0.0)
+    t = obench.measure(f, n=3)
+    rec = perfbridge.hlo_record(eng._ev._jit_grid,
+                                args=(placements, eng._pack, 0.0, 0.0),
+                                measured_s=t.seconds,
+                                compile_snapshot=None)
+    return dict(hlo_flops=rec["hlo_flops"],
+                roofline_fraction=rec["roofline_fraction"],
+                grid_dispatch_s=t.seconds)
 
 
 def run(smoke: bool = False) -> list[str]:
@@ -189,11 +222,13 @@ def run(smoke: bool = False) -> list[str]:
     run_b = lambda: random_search(prob, np.random.default_rng(7),
                                   n_candidates=cfg["p_random"], engine=eng)
     run_b()  # warm (jit compile per bucket shape)
-    bs, rb = _time(run_b)
+    bs, rb, n_rec = _timed_batched(run_b)
     ss, rs = _time(lambda: _scalar_random_search(
         prob, np.random.default_rng(7), cfg["p_random"]))
     rows.append(_row("random_dense", ss, bs, rs, rb, gated=True,
-                     V=cfg["v_dense"], candidates=cfg["p_random"]))
+                     n_recompiles=n_rec, V=cfg["v_dense"],
+                     candidates=cfg["p_random"],
+                     **_hlo_fields(eng, cfg["p_random"])))
 
     # -- random search, structured representation (V to 131072) --------------
     prob_s = _structured_problem(rng, cfg["v_structured"])
@@ -202,11 +237,11 @@ def run(smoke: bool = False) -> list[str]:
         prob_s, np.random.default_rng(7), n_candidates=cfg["p_structured"],
         batch=cfg["p_structured"], engine=eng_s)
     run_b()  # warm
-    bs, rb = _time(run_b)
+    bs, rb, n_rec = _timed_batched(run_b)
     ss, rs = _time(lambda: _scalar_random_search(
         prob_s, np.random.default_rng(7), cfg["p_structured"]))
     rows.append(_row("random_structured", ss, bs, rs, rb, gated=True,
-                     V=cfg["v_structured"], candidates=cfg["p_structured"]))
+                     n_recompiles=n_rec, V=cfg["v_structured"], candidates=cfg["p_structured"]))
 
     # -- exhaustive oracle, matched enumeration ------------------------------
     prob_e = _dense_problem(np.random.default_rng(3), 3, coupling=True)
@@ -215,20 +250,20 @@ def run(smoke: bool = False) -> list[str]:
     eng_e = BatchedProblem(prob_e)
     run_b = lambda: exhaustive_search(prob_e, granularity=4, engine=eng_e)
     run_b()  # warm
-    bs, rb = _time(run_b)
+    bs, rb, n_rec = _timed_batched(run_b)
     ss, rs = _time(lambda: _scalar_exhaustive(prob_e, granularity=4))
     rows.append(_row("exhaustive", ss, bs, rs, rb, gated=True,
-                     V=3, candidates=rb.evals))
+                     n_recompiles=n_rec, V=3, candidates=rb.evals))
 
     # -- greedy descent (reported, not gated) --------------------------------
     prob_g = _dense_problem(np.random.default_rng(5), cfg["greedy_v"])
     eng_g = BatchedProblem(prob_g)
     run_b = lambda: greedy_transfer(prob_g, engine=eng_g)
     run_b()  # warm
-    bs, rb = _time(run_b)
+    bs, rb, n_rec = _timed_batched(run_b)
     ss, rs = _time(lambda: _scalar_greedy(prob_g))
     rows.append(_row("greedy_dense", ss, bs, rs, rb, gated=False,
-                     V=cfg["greedy_v"], candidates=rb.evals))
+                     n_recompiles=n_rec, V=cfg["greedy_v"], candidates=rb.evals))
 
     for r in rows:
         out.append(f"search_{r['name']},{r['seconds_batched'] * 1e3:.2f}ms,"

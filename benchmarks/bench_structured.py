@@ -21,7 +21,6 @@ Usage:
 import argparse
 import json
 import sys
-import time
 from pathlib import Path
 
 import numpy as np
@@ -29,6 +28,7 @@ import numpy as np
 from repro.core import latency, objective_F
 from repro.core.graph import linear_graph
 from repro.core.placement import random_placement
+from repro.obs import bench as obench
 from repro.sim import (BatchedEvaluator, ScenarioConfig, pack_fleets,
                        pack_placements, region_fleet_family)
 
@@ -55,14 +55,9 @@ SMOKE_DENSE_MAX_V = 1024
 def _time(f, n=5):
     """(median seconds, last result) — median over n reps so one noisy CI
     rep can't flip the --check gate; the result feeds the oracle spot-check
-    without an extra dispatch."""
-    out = f()  # warm (jit compile)
-    times = []
-    for _ in range(n):
-        t0 = time.perf_counter()
-        out = f()
-        times.append(time.perf_counter() - t0)
-    return float(np.median(times)), out
+    without an extra dispatch (shared harness: repro.obs.bench)."""
+    t = obench.measure(f, n=n, block=False)
+    return t.seconds, t.result
 
 
 def _instance(rng, v: int, n_placements: int):

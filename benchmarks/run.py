@@ -11,7 +11,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (bench_dq_tradeoff, bench_geo_calibration,
-                            bench_kernels, bench_optimizers,
+                            bench_kernels, bench_obs, bench_optimizers,
                             bench_paper_example, bench_roofline,
                             bench_scaling, bench_scenarios, bench_search,
                             bench_structured)
@@ -23,6 +23,7 @@ def main() -> None:
         ("scenarios", bench_scenarios.run),
         ("structured", bench_structured.run),
         ("search", bench_search.run),
+        ("obs", bench_obs.run),
         ("kernels", bench_kernels.run),
         ("geo_calibration", bench_geo_calibration.run),
         ("roofline", bench_roofline.run),

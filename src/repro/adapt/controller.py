@@ -41,6 +41,7 @@ import math
 
 import numpy as np
 
+from repro import obs
 from repro.adapt.regret import RegretReport, reconfiguration_cost
 from repro.core.calibration import (ReplayWindow, fit_work_unit,
                                     normalized_drift, refit_from_replay)
@@ -172,10 +173,15 @@ class AdaptiveController:
         fleets = [self.believed] + [
             perturbed_fleet(self.believed, rng, cfg.robust_jitter)
             for _ in range(max(cfg.robust_scenarios - 1, 0))]
-        lat = np.asarray(self._evaluator.score_grid(
-            pack_placements(list(cands)), pack_fleets(fleets),
-            dq=0.0, beta=0.0), dtype=np.float64)          # (S, P)
+        with obs.span("adapt.reoptimize", P=int(cands.shape[0]),
+                      S=len(fleets), D=int(np.size(dqs))) as sp:
+            lat = np.asarray(sp.sync(self._evaluator.score_grid(
+                pack_placements(list(cands)), pack_fleets(fleets),
+                dq=0.0, beta=0.0)), dtype=np.float64)     # (S, P)
         self.controller_dispatches += 1
+        reg = obs.registry()
+        if reg.enabled:
+            reg.counter("adapt.reoptimize.dispatches").add(1)
         denom = 1.0 + cfg.beta * np.asarray(dqs, dtype=np.float64)
         worst = (lat[:, :, None] / denom[None, None, :]).max(axis=0)  # (P, D)
         i, d = divmod(int(np.argmin(worst)), worst.shape[1])
@@ -313,6 +319,9 @@ class AdaptiveController:
             drift = normalized_drift(np.array(w_obs[tail]),
                                      np.array(w_mod[tail]))
             drift_series.append(drift)
+            if np.isfinite(drift):
+                # Perfetto counter track: the controller's trigger signal
+                obs.counter_sample("adapt.drift", drift)
             triggered = (np.isfinite(drift)
                          and drift > cfg.drift_threshold) \
                 or pending_structural
@@ -321,9 +330,12 @@ class AdaptiveController:
             if (ticks_since_adapt >= cfg.cooldown
                     and ((len(w_obs) >= cfg.window and triggered) or fast)):
                 pending_structural = False
-                refit = refit_from_replay(self.believed_graph, self.believed,
-                                          make_window(tail), self.cost_cfg,
-                                          work_unit=self.work_unit)
+                with obs.span("adapt.refit", ticks=len(w_obs)):
+                    refit = refit_from_replay(
+                        self.believed_graph, self.believed,
+                        make_window(tail), self.cost_cfg,
+                        work_unit=self.work_unit)
+                reg = obs.registry()
                 if not np.isfinite(refit.post_drift) \
                         or refit.post_drift <= refit.pre_drift:
                     self.believed = refit.fleet
@@ -333,6 +345,11 @@ class AdaptiveController:
                         # (the next re-optimization rebuilds its evaluator)
                         self.believed_graph = refit.graph
                     refit_ticks.append(ev.t)
+                    if reg.enabled:
+                        reg.counter("adapt.refits.adopted").add(1)
+                elif reg.enabled:
+                    # refit explained the window WORSE — belief kept
+                    reg.counter("adapt.refits.rejected").add(1)
                 x_new, dq_new, score_new, score_inc = self._reoptimize(rng)
                 # gate on the BELIEVED price (all the controller has); the
                 # regret account below charges the TRUE price of the move
@@ -346,6 +363,8 @@ class AdaptiveController:
                             cfg.state_bytes_per_op)
                         reconfig_ticks.append(ev.t)
                         oracle_dirty = True
+                        if reg.enabled:
+                            reg.counter("adapt.reconfigs").add(1)
                     eng.x = x_new
                     self.dq = dq_new
                 ticks_since_adapt = 0
@@ -355,6 +374,10 @@ class AdaptiveController:
             f_adaptive.append(self._true_F(true_g, eng.x, self.dq))
             f_oracle.append(self._true_F(true_g, oracle_x, oracle_dq))
             charges.append(charge)
+            # regret timelines: one Perfetto counter track per policy
+            # (main series = the adaptive policy under test)
+            obs.counter_sample("adapt.F", f_adaptive[-1],
+                               static=f_static[-1], oracle=f_oracle[-1])
 
         return RegretReport(
             scenario=self.name,

@@ -204,6 +204,8 @@ def projected_gradient(prob: PlacementProblem, steps: int = 400,
     beta = prob.beta
     caps_cfg = prob.dq
     history, evals = [], 0
+    dispatches = 0  # jitted grad_fn dispatches (the shim-path counter the
+    # search layer reports; a regression test pins it to steps x len(temps))
 
     def x_of(z):
         return jax.nn.softmax(z + mask, axis=1)
@@ -231,6 +233,7 @@ def projected_gradient(prob: PlacementProblem, steps: int = 400,
         for t in range(1, steps + 1):
             val, g = grad_fn(params)
             evals += 1
+            dispatches += 1
             m = jax.tree.map(lambda m_, g_: 0.9 * m_ + 0.1 * g_, m, g)
             v = jax.tree.map(lambda v_, g_: 0.999 * v_ + 0.001 * g_ * g_, v, g)
             mhat = jax.tree.map(lambda m_: m_ / (1 - 0.9 ** t), m)
@@ -256,7 +259,8 @@ def projected_gradient(prob: PlacementProblem, steps: int = 400,
         evals += 1
         if f < best_f:
             best_f, best_dq, best_x = f, dq, xf
-    return OptResult.of(prob, best_x, best_dq, history, evals)
+    return OptResult.of(prob, best_x, best_dq, history, evals,
+                        dispatches=dispatches)
 
 
 # -- scenario-robust search (min–max over a generated what-if family) ---------

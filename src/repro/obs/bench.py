@@ -1,0 +1,105 @@
+"""Shared benchmark timing harness (the eight hand-rolled
+``time.perf_counter`` helpers that used to live in ``benchmarks/bench_*.py``
+— warmup conventions, ``block_until_ready`` and median-of-n now happen in
+ONE place, consistently).
+
+  * :func:`measure`   — warmup calls, then n timed calls; every call is
+    flushed with ``jax.block_until_ready`` so async dispatch can't leak
+    device work past the clock.  Returns a :class:`Timing` with
+    median/mean/min/max seconds plus the compile accounting of the TIMED
+    region (``n_recompiles`` > 0 after warmup = a shape bucket missed).
+  * :func:`time_once` — one timed call returning ``(seconds, result)`` —
+    the one-shot form the searcher races use (warm the callable first
+    when steady-state cost is the claim under test).
+
+Benchmark rows embed ``Timing.row()`` (seconds = median) so every
+``BENCH_*.json`` reports recompile counts for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+
+from repro.obs import jaxhooks
+
+__all__ = ["Timing", "measure", "time_once"]
+
+
+@dataclasses.dataclass
+class Timing:
+    """Timed-region summary; ``seconds`` (the headline number) is the
+    median — robust to one-off scheduler noise, unlike mean or min."""
+
+    times: list[float]
+    n_recompiles: int
+    compile_s: float
+    # the LAST timed call's return value — benchmarks feed it to oracle
+    # spot-checks without paying an extra dispatch
+    result: object = None
+
+    @property
+    def seconds(self) -> float:
+        return statistics.median(self.times)
+
+    @property
+    def mean_s(self) -> float:
+        return statistics.fmean(self.times)
+
+    @property
+    def min_s(self) -> float:
+        return min(self.times)
+
+    @property
+    def max_s(self) -> float:
+        return max(self.times)
+
+    def row(self) -> dict:
+        return {"seconds": self.seconds, "mean_s": self.mean_s,
+                "min_s": self.min_s, "max_s": self.max_s,
+                "n_timed": len(self.times),
+                "n_recompiles": self.n_recompiles,
+                "compile_s": self.compile_s}
+
+
+def _call_blocked(f, block: bool):
+    out = f()
+    if block:
+        import jax
+
+        jax.block_until_ready(out)
+    return out
+
+
+def measure(f, n: int = 5, warmup: int = 1, block: bool = True) -> Timing:
+    """``warmup`` un-timed calls (jit compiles land here), then ``n`` timed
+    calls flushed via ``block_until_ready`` (``block=False`` for pure-host
+    callables whose results aren't jax arrays).
+
+    Compile accounting covers the TIMED region only: ``n_recompiles`` > 0
+    means the supposedly-warm loop still compiled — e.g. a chunked
+    ``score_batch`` crossing into an unseen shape bucket."""
+    if n < 1:
+        raise ValueError(f"need n >= 1 timed calls, got {n}")
+    for _ in range(warmup):
+        _call_blocked(f, block)
+    snap = jaxhooks.snapshot()
+    times = []
+    out = None
+    for _ in range(n):
+        t0 = time.perf_counter()
+        out = _call_blocked(f, block)
+        times.append(time.perf_counter() - t0)
+    n_rec, comp_s = snap.delta()
+    return Timing(times=times, n_recompiles=n_rec, compile_s=comp_s,
+                  result=out)
+
+
+def time_once(f, block: bool = True):
+    """One timed call → ``(seconds, result)``, flushed like
+    :func:`measure`.  No warmup: callers racing cold-vs-warm decide
+    themselves what to warm."""
+    t0 = time.perf_counter()
+    out = _call_blocked(f, block)
+    return time.perf_counter() - t0, out

@@ -1,0 +1,101 @@
+"""Recompile and compile-time accounting via ``jax.monitoring``.
+
+jax 0.4.x fires a ``/jax/core/compile/backend_compile_duration`` event for
+every XLA backend compilation — including the silent retraces a
+shape-bucket miss triggers in chunked ``score_batch`` — and nothing at all
+for compilation-cache hits.  One module-level listener (installed lazily,
+at most once; ``jax.monitoring`` has no unregister, so the listener itself
+stays registered and checks an armed flag) turns those events into:
+
+  * module-level totals (``compile_count`` / ``compile_seconds``), always
+    updated while armed — the bench harness snapshots them around timed
+    regions to report ``n_recompiles`` per benchmark record;
+  * the default registry's ``jax.compiles`` counter and
+    ``jax.compile_seconds`` total (when the registry is enabled);
+  * compile-time attribution on the innermost active span
+    (:mod:`repro.obs.spans`), which is how a span splits its wall time
+    into compile vs execute.
+
+``compile_count`` counts *backend compilations*: the first compilation of a
+callable and every subsequent recompile look identical to XLA, so
+"recompiles" in steady-state accounting means snapshotting after warmup
+(what :func:`repro.obs.bench.measure` does).
+"""
+
+from __future__ import annotations
+
+import threading
+
+__all__ = ["install", "installed", "snapshot", "CompileSnapshot",
+           "compile_count", "compile_seconds"]
+
+# total-duration events of the three compile phases; backend_compile is the
+# one that fires exactly once per XLA compilation, so it carries the count
+_BACKEND_COMPILE = "/jax/core/compile/backend_compile_duration"
+_COMPILE_PHASES = (
+    "/jax/core/compile/jaxpr_trace_duration",
+    "/jax/core/compile/jaxpr_to_mlir_module_duration",
+    _BACKEND_COMPILE,
+)
+
+_lock = threading.Lock()
+_installed = False
+_armed = False
+
+compile_count = 0
+compile_seconds = 0.0
+
+
+def _on_duration(event: str, duration: float, **kwargs) -> None:
+    global compile_count, compile_seconds
+    if not _armed or event not in _COMPILE_PHASES:
+        return
+    compile_seconds += duration
+    is_backend = event == _BACKEND_COMPILE
+    if is_backend:
+        compile_count += 1
+    from repro.obs import spans
+    from repro.obs.registry import registry
+
+    spans._attribute_compile(duration, is_backend)
+    reg = registry()
+    if reg.enabled:
+        reg.counter("jax.compile_seconds").add(duration)
+        if is_backend:
+            reg.counter("jax.compiles").add(1)
+
+
+def install() -> None:
+    """Arm compile accounting (idempotent).  Registered once per process;
+    never unregistered — disarming via the flag keeps repeat
+    enable/disable cycles from stacking listeners."""
+    global _installed, _armed
+    with _lock:
+        if not _installed:
+            from jax import monitoring
+
+            monitoring.register_event_duration_secs_listener(_on_duration)
+            _installed = True
+        _armed = True
+
+
+def installed() -> bool:
+    return _installed and _armed
+
+
+class CompileSnapshot:
+    """Point-in-time compile totals; subtract two to get a window."""
+
+    def __init__(self):
+        self.count = compile_count
+        self.seconds = compile_seconds
+
+    def delta(self) -> tuple[int, float]:
+        """(compilations, compile seconds) since this snapshot."""
+        return (compile_count - self.count, compile_seconds - self.seconds)
+
+
+def snapshot() -> CompileSnapshot:
+    """Arm the hooks and snapshot the totals (see CompileSnapshot)."""
+    install()
+    return CompileSnapshot()

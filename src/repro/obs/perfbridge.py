@@ -1,0 +1,98 @@
+"""The ``repro.perf`` bridge: attach HLO FLOPs/bytes/collective stats and
+roofline fractions to any jitted callable.
+
+``repro.perf.hlo`` (trip-count-aware HLO analysis) and
+``repro.perf.roofline`` (TPU-v5e roofline terms) existed but were
+disconnected from the sim/search stack (ROADMAP item 1).  This module is
+the wire: :func:`hlo_record` lowers a jitted callable at given operands,
+parses the compiled module, and returns the JSON-able record every
+``BENCH_*.json`` row embeds —
+
+    {"hlo_flops": ..., "hlo_bytes": ..., "wire_bytes": ...,
+     "collective_counts": {...}, "roofline": {...},
+     "roofline_fraction": ..., "n_recompiles": ...}
+
+``roofline_fraction`` is roofline-bound time over measured time: the
+fraction of the hardware roofline the measured dispatch achieves (1.0 =
+running exactly at the max(compute, memory, collective) bound; CPU runs
+score low against the TPU-v5e constants — the point is tracking the ratio
+per shape over time, not absolute truth).
+
+``n_recompiles`` rides along from :mod:`repro.obs.jaxhooks` when the
+caller hands a :class:`~repro.obs.jaxhooks.CompileSnapshot` taken before
+the measured region — the convention :func:`repro.obs.bench.measure`
+implements.
+"""
+
+from __future__ import annotations
+
+from repro.obs import jaxhooks
+
+__all__ = ["hlo_record", "attach_to_span", "compiled_text"]
+
+
+def compiled_text(jitted_fn, *args, **kwargs) -> str:
+    """Compiled (post-optimization) HLO text of a jitted callable at these
+    abstract operands (arrays or jax.ShapeDtypeStruct)."""
+    return jitted_fn.lower(*args, **kwargs).compile().as_text()
+
+
+def hlo_record(jitted_fn, args: tuple = (), kwargs: dict | None = None,
+               measured_s: float | None = None,
+               model_flops: float | None = None, chips: int = 1,
+               compile_snapshot: jaxhooks.CompileSnapshot | None = None,
+               hlo_text: str | None = None) -> dict:
+    """Build the benchmark-record HLO/roofline block for one jitted
+    callable (pass ``hlo_text`` to skip the lower+compile when the caller
+    already has the module text).
+
+    ``measured_s`` (seconds per call of the same operands) turns the
+    roofline bound into ``roofline_fraction``; ``model_flops`` defaults to
+    the HLO count (useful_fraction 1.0) when the caller has no analytic
+    model.  ``compile_snapshot`` — taken BEFORE the measured region —
+    contributes ``n_recompiles`` / ``compile_s`` for that region; without
+    one they report the lower+compile this call itself performed.
+    """
+    from repro.perf.hlo import analyze_module
+    from repro.perf.roofline import compute_terms
+
+    own = jaxhooks.snapshot()
+    if hlo_text is None:
+        hlo_text = compiled_text(jitted_fn, *args, **(kwargs or {}))
+    stats = analyze_module(hlo_text)
+    wire = stats.collectives.total_wire_bytes
+    terms = compute_terms(
+        hlo_flops=stats.flops, hlo_bytes=stats.hbm_bytes, wire_bytes=wire,
+        chips=chips,
+        model_flops=stats.flops if model_flops is None else model_flops,
+        per_device=True)
+    snap = compile_snapshot if compile_snapshot is not None else own
+    n_recompiles, compile_s = snap.delta()
+    record = {
+        "hlo_flops": float(stats.flops),
+        "hlo_bytes": float(stats.hbm_bytes),
+        "wire_bytes": float(wire),
+        "collective_counts": {k: int(v)
+                              for k, v in stats.collectives.counts.items()},
+        "roofline": terms.row(),
+        "roofline_fraction": (
+            None if not measured_s or measured_s <= 0
+            else terms.step_time_s / measured_s),
+        "measured_s": measured_s,
+        "n_recompiles": int(n_recompiles),
+        "compile_s": float(compile_s),
+    }
+    return record
+
+
+def attach_to_span(sp, jitted_fn, args: tuple = (),
+                   kwargs: dict | None = None, **rec_kwargs) -> dict:
+    """Compute :func:`hlo_record` and fold it into a live span's args (the
+    trace event then carries the FLOPs/roofline block).  Works on the
+    disabled-path null span too (record still returned, nothing stored)."""
+    from repro.obs.spans import Span
+
+    rec = hlo_record(jitted_fn, args, kwargs, **rec_kwargs)
+    if isinstance(sp, Span):
+        sp.args["hlo"] = rec
+    return rec

@@ -38,6 +38,7 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.devices import ExplicitFleet, RegionFleet, RegionFleetFamily
 from repro.core.optimizers import PlacementProblem
 from repro.search.decision import dq_caps_mask, split_dq_term
@@ -74,6 +75,10 @@ class BatchedProblem:
     def __post_init__(self):
         self.evals = 0
         self.dispatches = 0
+        # shape buckets this instance has dispatched (telemetry: the first
+        # dispatch of an unseen padded size is a compilation-cache miss —
+        # a silent retrace unless the evaluator was warmed on that bucket)
+        self._seen_buckets: set[int] = set()
         self.scalar_fallback = self.prob.cost_cfg.include_compute
         if self.scalar_fallback:
             return
@@ -101,12 +106,24 @@ class BatchedProblem:
         """One padded chunk through score_grid at dq = 0: (latency (B,),
         dq-independent scalarization remainder (B,))."""
         b = xs.shape[0]
-        pad = _bucket(b) - b
+        bucket = _bucket(b)
+        pad = bucket - b
         if pad:
             xs = np.concatenate([xs, np.repeat(xs[:1], pad, axis=0)])
         placements = pack_placements(list(xs))
         obj = self.prob.objectives
         self.dispatches += 1
+        reg = obs.registry()
+        if reg.enabled:
+            reg.counter("search.dispatches").add(1)
+            reg.counter("search.candidates").add(b)
+            reg.histogram("search.candidates_per_dispatch", lo=1.0).observe(b)
+            if bucket not in self._seen_buckets:
+                # a fresh padded shape: this dispatch retraces/compiles
+                # (visible as jax.compiles too, but this names the bucket)
+                reg.counter("search.bucket_first_dispatch",
+                            bucket=str(bucket)).add(1)
+        self._seen_buckets.add(bucket)
         if obj is None:
             raw = self._ev.score_grid(placements, self._pack,
                                       dq=0.0, beta=0.0)
@@ -153,7 +170,8 @@ class BatchedProblem:
         if self.scalar_fallback:
             return np.array([[self.prob.score(x, float(d)) for d in dq_arr]
                              for x in xs])
-        lat, rest = self.raw_values(xs)
+        with obs.span("search.score_batch", P=P, D=D):
+            lat, rest = self.raw_values(xs)
         denom = 1.0 + self.prob.beta * dq_arr                      # (D,)
         scores = rest[:, None] + self._w_lat * lat[:, None] / denom[None, :]
         return np.where(self.feasible_mask(xs, dq_arr), scores, np.inf)

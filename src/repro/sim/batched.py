@@ -45,6 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.costmodel import CostConfig
 from repro.core.devices import ExplicitFleet, RegionFleet, RegionFleetFamily
 from repro.core.graph import OpGraph
@@ -442,6 +443,23 @@ class BatchedEvaluator:
             coms = jnp.asarray(coms)
         S = coms.n_scenarios if structured else coms.shape[0]
         dq_arr = self._validate_dq(dq, S)
+        path = "structured" if structured else "dense"
+        multi = objectives is not None
+        reg = obs.registry()
+        if reg.enabled:
+            reg.counter("eval.score_grid.dispatches", path=path).add(1)
+            reg.histogram("eval.score_grid.cells", lo=1.0).observe(
+                S * int(placements.shape[0]))
+        with obs.span("score_grid", S=S, P=int(placements.shape[0]),
+                      path=path, multi=multi) as sp:
+            out = self._dispatch_grid(placements, coms, dq_arr, beta,
+                                      objectives, speed, structured)
+            sp.sync(out.scalarized if isinstance(out, ObjectiveGrids)
+                    else out)
+        return out
+
+    def _dispatch_grid(self, placements, coms, dq_arr, beta, objectives,
+                       speed, structured: bool):
         if objectives is None:
             if speed is not None:
                 raise ValueError("speed only feeds the occupancy objectives "

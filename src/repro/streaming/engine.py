@@ -29,6 +29,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.core.costmodel import CostConfig, edge_latencies, latency
 from repro.core.devices import ExplicitFleet, RegionFleet
 from repro.core.graph import OpGraph
@@ -122,6 +123,18 @@ class StreamingEngine:
         return np.concatenate([out] * reps, axis=0)[:target]
 
     def run_batch(self, batch: np.ndarray) -> BatchReport:
+        with obs.span("engine.run_batch", rows=len(batch)):
+            report = self._run_batch(batch)
+        reg = obs.registry()
+        if reg.enabled:
+            reg.counter("engine.batches").add(1)
+            reg.counter("engine.rows_in").add(report.rows_in)
+            # the WORLD's end-to-end latency signal, as a Perfetto counter
+            # timeline — what an adaptive controller watches
+            obs.counter_sample("engine.true_latency", report.true_latency)
+        return report
+
+    def _run_batch(self, batch: np.ndarray) -> BatchReport:
         t0 = time.perf_counter()
         g = self.graph
         busy = np.zeros(self.fleet.n_devices)

@@ -112,3 +112,20 @@ def test_degrade_device_shifts_mass():
     res1 = greedy_transfer(prob2, x0=res0.x)
     assert res1.x[:, 0].sum() <= mass0 + 1e-9
     assert res1.F <= prob2.score(res0.x, res0.dq_fraction) + 1e-9
+
+
+# -- dispatch accounting survives the core shims ------------------------------
+
+def test_dispatch_counter_survives_shim_path(paper_problem):
+    """Every core-level optimizer entry point reports its jitted dispatch
+    count: the batched shims forward the engine's counter, and
+    projected_gradient counts its grad_fn dispatches (regression: it used
+    to silently report 0 while issuing steps x temps jitted calls)."""
+    prob = paper_problem
+    res = projected_gradient(prob, steps=25, temps=(0.1, 0.02))
+    assert res.dispatches == 25 * 2
+    for res in (random_search(prob, np.random.default_rng(0),
+                              n_candidates=64),
+                greedy_transfer(prob)):
+        assert res.dispatches >= 1
+        assert res.dispatches <= res.evals
