@@ -1,0 +1,251 @@
+"""Static-analysis & sanitizer gates (BENCH_analysis.json): the linter
+holds the shipped tree clean and the runtime sanitizer is invisible.
+
+The repro.analysis claims this benchmark records and gates:
+
+  * **lint_clean**: ``repro.analysis.lint_paths(["src"])`` reports ZERO
+    errors — the tree satisfies its own trace-safety/numerics invariants
+    (the CI ``lint`` job enforces the same through the real CLI);
+  * **sanitizer_overhead**: with the sanitizer ENABLED (NaN guards,
+    domain checks, retrace budget armed), the ``BatchedProblem.
+    score_batch`` hot loop costs within 5% of the disabled default;
+  * **numerics**: enabling the sanitizer changes nothing — bitwise-
+    identical (P, D) score grids, identical argmin, equal dispatch
+    counts (checks only READ values the computation already produced);
+  * **detection**: the guards actually fire — NaN candidates, mis-shaped
+    batches, out-of-domain dq, and a blown retrace budget each raise a
+    typed ``AnalysisError`` carrying the offending rule/bucket.
+
+Usage:
+  python -m benchmarks.bench_analysis            # full loop sizes
+  python -m benchmarks.bench_analysis --smoke    # small sizes (CI)
+  python -m benchmarks.bench_analysis --check    # exit 1 on a failed gate
+"""
+
+import argparse
+import gc
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.analysis import AnalysisError, lint_paths, sanitize
+from repro.core import ExplicitFleet, PlacementProblem, linear_graph
+from repro.obs import bench as obench
+from repro.search import BatchedProblem
+
+OUT_PATH = Path("BENCH_analysis.json")
+SRC_DIR = Path(__file__).resolve().parent.parent / "src"
+
+MAX_ENABLED_OVERHEAD = 0.05
+
+FULL = dict(v=64, p=256, loop_reps=40, samples=11)
+SMOKE = dict(v=32, p=256, loop_reps=30, samples=11)
+
+
+def _dense_problem(rng, v: int) -> PlacementProblem:
+    com = rng.uniform(0.1, 3.0, (v, v))
+    com = (com + com.T) / 2.0
+    np.fill_diagonal(com, 0.0)
+    g = linear_graph([float(s) for s in rng.uniform(0.5, 1.5, 8)])
+    return PlacementProblem(g, ExplicitFleet(com_cost=com), beta=1.0)
+
+
+def _inputs(cfg):
+    rng = np.random.default_rng(0)
+    prob = _dense_problem(rng, cfg["v"])
+    xs = rng.dirichlet(np.ones(cfg["v"]), size=(cfg["p"], 8))
+    dqs = np.linspace(0.0, 0.8, 5)
+    return prob, xs, dqs
+
+
+# -- gate 1: the shipped tree lints clean -------------------------------------
+
+def _lint_row(cfg) -> dict:
+    report = lint_paths([SRC_DIR])
+    c = report["counts"]
+    return dict(name="lint_clean", files_checked=report["files_checked"],
+                errors=c["error"], warnings=c["warning"],
+                suppressed=c["suppressed"],
+                ok=bool(c["error"] == 0 and report["files_checked"] > 0))
+
+
+# -- gate 2: sanitizer-enabled overhead on the score_batch hot loop -----------
+
+def _overhead_row(cfg) -> dict:
+    """Attributed within-run overhead: every sanitizer code path the
+    enabled hot loop executes (``check_dq``, the output NaN guard) is
+    wrapped with an accumulating timer, and the gate is
+
+        t_sanitizer / (t_loop_enabled - t_sanitizer) < 5%.
+
+    Both numerator and denominator come from the SAME run, so the
+    estimate is immune to the multi-second clock/contention drift that
+    swamps A/B block medians on sub-ms calls (observed ±15% per pair on
+    a ~2% true effect).  Attribution still catches structural costs, not
+    just check arithmetic: a check that forces an early device sync
+    blocks inside its own ``np.asarray`` and lands in the numerator.
+    The un-wrapped residue (two ``state()`` reads and their branches) is
+    bounded well below the timer-wrapper overhead already counted
+    against the sanitizer.
+    """
+    prob, xs, dqs = _inputs(cfg)
+    eng = BatchedProblem(prob)
+    eng.score_batch(xs, dqs)  # warm (jit compile at this bucket)
+    assert not sanitize.enabled()
+
+    reps = cfg["samples"] * cfg["loop_reps"]
+    acc = [0.0]
+    orig_dq = sanitize.check_dq
+    orig_finite = sanitize.check_finite
+    orig_guard = BatchedProblem._guard_outputs
+
+    def timed_dq(dq, **kw):
+        t0 = time.perf_counter()
+        orig_dq(dq, **kw)
+        acc[0] += time.perf_counter() - t0
+
+    def timed_finite(name, arr, **kw):
+        # covers score_grid's output guard (sim/batched.py).  Wait for
+        # device compute BEFORE the timer: both arms pay that wait (the
+        # disabled arm blocks at np.concatenate instead), so only the
+        # guard's marginal work — host transfer + isnan scan — is
+        # sanitizer cost
+        arr = jax.block_until_ready(arr)
+        t0 = time.perf_counter()
+        orig_finite(name, arr, **kw)
+        acc[0] += time.perf_counter() - t0
+
+    def timed_guard(self, lat, rest):
+        t0 = time.perf_counter()
+        orig_guard(self, lat, rest)
+        acc[0] += time.perf_counter() - t0
+
+    gc.disable()
+    try:
+        sanitize.check_dq = timed_dq
+        sanitize.check_finite = timed_finite
+        BatchedProblem._guard_outputs = timed_guard
+        sanitize.enable(retrace_budget=64)
+        total, _ = obench.time_once(
+            lambda: [eng.score_batch(xs, dqs) for _ in range(reps)],
+            block=False)
+    finally:
+        sanitize.check_dq = orig_dq
+        sanitize.check_finite = orig_finite
+        BatchedProblem._guard_outputs = orig_guard
+        sanitize.disable()
+        gc.enable()
+
+    t_checks = acc[0]
+    overhead = t_checks / max(total - t_checks, 1e-12)
+    return dict(name="sanitizer_overhead", seconds_enabled=total,
+                seconds_sanitizer=t_checks, reps=reps, overhead=overhead,
+                max_overhead=MAX_ENABLED_OVERHEAD,
+                ok=bool(overhead < MAX_ENABLED_OVERHEAD))
+
+
+# -- gate 3: enabling the sanitizer never changes numerics --------------------
+
+def _numerics_row(cfg) -> dict:
+    prob, xs, dqs = _inputs(cfg)
+    eng_off = BatchedProblem(prob)
+    scores_off = eng_off.score_batch(xs, dqs)
+    with sanitize.sanitized(retrace_budget=64):
+        eng_on = BatchedProblem(prob)
+        scores_on = eng_on.score_batch(xs, dqs)
+    bitwise = bool(np.array_equal(scores_off, scores_on))
+    argmin_eq = bool(np.argmin(scores_off) == np.argmin(scores_on))
+    return dict(name="numerics",
+                bitwise_equal_scores=bitwise,
+                argmin_equal=argmin_eq,
+                dispatches_disabled=eng_off.dispatches,
+                dispatches_enabled=eng_on.dispatches,
+                ok=bool(bitwise and argmin_eq
+                        and eng_on.dispatches == eng_off.dispatches))
+
+
+# -- gate 4: the guards actually fire -----------------------------------------
+
+def _detection_row(cfg) -> dict:
+    prob, xs, dqs = _inputs(cfg)
+
+    def trips(fn, want_rule):
+        try:
+            fn()
+        except AnalysisError as e:
+            return e.rule == want_rule
+        return False
+
+    bad_nan = xs.copy()
+    bad_nan[0, 0, 0] = np.nan
+    with sanitize.sanitized(retrace_budget=64):
+        nan_ok = trips(lambda: BatchedProblem(prob).score_batch(bad_nan, dqs),
+                       "nan-guard")
+        dq_ok = trips(lambda: BatchedProblem(prob).score_batch(
+            xs, np.array([0.2, 1.5])), "dq-domain")
+    shape_ok = trips(lambda: BatchedProblem(prob).score_batch(
+        xs[:, :4, :], dqs), "score-batch-domain")  # always-on, no enable
+    with sanitize.sanitized(retrace_budget=0):
+        budget_ok = trips(lambda: BatchedProblem(prob).score_batch(xs, dqs),
+                          "no-silent-retrace")
+    return dict(name="detection", nan_detected=nan_ok,
+                dq_domain_detected=dq_ok, shape_detected=shape_ok,
+                retrace_budget_detected=budget_ok,
+                ok=bool(nan_ok and dq_ok and shape_ok and budget_ok))
+
+
+def run(smoke: bool = False) -> list[str]:
+    cfg = SMOKE if smoke else FULL
+    rows = [_lint_row(cfg), _overhead_row(cfg), _numerics_row(cfg),
+            _detection_row(cfg)]
+    report = {"smoke": smoke, "rows": rows,
+              "all_ok": all(r["ok"] for r in rows)}
+    OUT_PATH.write_text(json.dumps(report, indent=2) + "\n")
+    out = []
+    for r in rows:
+        if r["name"] == "lint_clean":
+            out.append(f"analysis_lint,{r['files_checked']}files,"
+                       f"errors={r['errors']},suppressed={r['suppressed']},"
+                       f"ok={r['ok']}")
+        elif r["name"] == "sanitizer_overhead":
+            out.append(f"analysis_overhead,{r['overhead'] * 100:.2f}%,"
+                       f"gate<{MAX_ENABLED_OVERHEAD * 100:.0f}%,"
+                       f"ok={r['ok']}")
+        elif r["name"] == "numerics":
+            out.append(f"analysis_numerics,"
+                       f"bitwise={r['bitwise_equal_scores']},"
+                       f"dispatches={r['dispatches_enabled']}=="
+                       f"{r['dispatches_disabled']},ok={r['ok']}")
+        else:
+            out.append(f"analysis_detection,nan={r['nan_detected']},"
+                       f"dq={r['dq_domain_detected']},"
+                       f"shape={r['shape_detected']},"
+                       f"budget={r['retrace_budget_detected']},ok={r['ok']}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small loop sizes (CI)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless every gate holds: src/ lints "
+                         "clean, sanitizer-enabled overhead <5%, "
+                         "bitwise-identical numerics, all guards fire")
+    ns = ap.parse_args()
+    for line in run(smoke=ns.smoke):
+        print(line)
+    if ns.check:
+        report = json.loads(OUT_PATH.read_text())
+        if not report["all_ok"]:
+            bad = [r["name"] for r in report["rows"] if not r["ok"]]
+            print(f"FAILED gates: {bad}", file=sys.stderr)
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

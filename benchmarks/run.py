@@ -10,11 +10,11 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_dq_tradeoff, bench_geo_calibration,
-                            bench_kernels, bench_obs, bench_optimizers,
-                            bench_paper_example, bench_roofline,
-                            bench_scaling, bench_scenarios, bench_search,
-                            bench_structured)
+    from benchmarks import (bench_analysis, bench_dq_tradeoff,
+                            bench_geo_calibration, bench_kernels, bench_obs,
+                            bench_optimizers, bench_paper_example,
+                            bench_roofline, bench_scaling, bench_scenarios,
+                            bench_search, bench_structured)
     suites = [
         ("paper_example", bench_paper_example.run),
         ("dq_tradeoff", bench_dq_tradeoff.run),
@@ -24,6 +24,7 @@ def main() -> None:
         ("structured", bench_structured.run),
         ("search", bench_search.run),
         ("obs", bench_obs.run),
+        ("analysis", bench_analysis.run),
         ("kernels", bench_kernels.run),
         ("geo_calibration", bench_geo_calibration.run),
         ("roofline", bench_roofline.run),

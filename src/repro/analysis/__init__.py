@@ -1,0 +1,37 @@
+"""repro.analysis — trace-safety & numerics static analysis (lint) plus a
+runtime sanitizer for the whole stack.
+
+The codebase rests on invariants nothing else enforces mechanically:
+float64 scalar oracles vs float32 batched twins, one-dispatch-per-block
+search, rng-stream compatibility of trace generators, telemetry that is
+bitwise-invariant and free when off.  This package makes them checkable:
+
+  * **lint** — ``python -m repro.analysis src/ tests/ benchmarks/`` runs an
+    AST rule engine (per-rule severity, ``# repro: ignore[rule-id]``
+    suppressions, JSON + human output) over the tree; CI keeps ``src/`` at
+    zero errors.  Rule catalog: ``src/repro/analysis/README.md``.
+  * **sanitize** — an opt-in runtime layer (same <5%-overhead contract as
+    ``repro.obs``) that guards ``score_grid``/``score_batch`` with NaN/Inf
+    checks, candidate dtype/shape/dq domain validation, and a retrace
+    budget on the existing ``search.bucket_first_dispatch`` buckets;
+    violations raise a typed :class:`AnalysisError` naming the offending
+    shape bucket instead of an opaque XLA retrace.
+
+    from repro import analysis
+    report = analysis.lint_paths(["src"])          # static pass
+    with analysis.sanitize.sanitized(retrace_budget=4):
+        eng.score_batch(xs, dqs)                   # runtime guards armed
+"""
+
+from repro.analysis import rules as _rules  # noqa: F401 — registers rules
+from repro.analysis import sanitize
+from repro.analysis.engine import (RULES, Finding, Rule, lint_file,
+                                   lint_paths, lint_source, render_human,
+                                   render_json)
+from repro.analysis.errors import AnalysisError
+
+__all__ = [
+    "AnalysisError", "Finding", "Rule", "RULES",
+    "lint_file", "lint_paths", "lint_source",
+    "render_human", "render_json", "sanitize",
+]

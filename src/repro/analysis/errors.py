@@ -1,0 +1,32 @@
+"""Typed errors for the analysis subsystem.
+
+:class:`AnalysisError` is raised by the runtime sanitizer
+(:mod:`repro.analysis.sanitize`) and by the always-on input validation in
+``BatchedProblem.score_batch`` — it names the violated rule (same ids as the
+static linter where one applies) and carries structured context (the
+offending shape-bucket key, array name, ...) so a failure points at the
+call site's data instead of an opaque XLA retrace or a NaN three layers
+later.
+"""
+
+from __future__ import annotations
+
+__all__ = ["AnalysisError"]
+
+
+class AnalysisError(RuntimeError):
+    """A violated trace-safety / numerics invariant, caught at runtime.
+
+    Attributes:
+        rule:    the rule id (kebab-case, e.g. ``"score-batch-domain"``,
+                 ``"no-silent-retrace"`` — linter ids where one applies).
+        context: structured details (``bucket=...``, ``name=...``) for
+                 programmatic consumers; rendered into the message too.
+    """
+
+    def __init__(self, rule: str, message: str, **context):
+        self.rule = rule
+        self.context = dict(context)
+        detail = ", ".join(f"{k}={v!r}" for k, v in self.context.items())
+        super().__init__(f"[{rule}] {message}"
+                         + (f" ({detail})" if detail else ""))

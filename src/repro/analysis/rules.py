@@ -1,0 +1,547 @@
+"""The shipped rule set — each rule enforces one invariant the stack's
+correctness or performance story rests on (see ``README.md`` for the
+catalog with rationale and example diagnostics).
+
+Rules yield ``(node, message)`` or ``(node, message, severity)`` tuples;
+the engine attaches defaults, locations, and suppressions.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import LintContext, rule
+
+# -- shared helpers -----------------------------------------------------------
+
+_JIT_LIKE = ("jax.jit", "jax.pmap")
+
+#: numpy.random module-level functions that mutate GLOBAL rng state; the
+#: Generator API (np.random.default_rng(...)) is the sanctioned source
+_LEGACY_NP_RANDOM = frozenset({
+    "seed", "random", "rand", "randn", "randint", "random_sample", "ranf",
+    "sample", "uniform", "normal", "lognormal", "standard_normal",
+    "poisson", "binomial", "choice", "shuffle", "permutation",
+    "exponential", "gamma", "beta", "dirichlet", "multinomial", "integers",
+    "random_integers", "bytes", "get_state", "set_state",
+})
+
+#: jax.random consumers that *use up* a key (reusing a key across two of
+#: these silently correlates the streams); split/fold_in derive fresh keys
+_KEY_SAFE = frozenset({"split", "fold_in", "key_data", "wrap_key_data",
+                       "PRNGKey", "key", "clone"})
+
+#: methods that mutate their receiver in place (or publish to a registry)
+_MUTATORS = frozenset({"append", "extend", "insert", "pop", "remove",
+                       "clear", "update", "setdefault", "add", "discard",
+                       "observe", "set", "inc", "write", "popitem",
+                       "appendleft"})
+
+#: repo methods whose result lives on device (jitted dispatch outputs)
+_DEVICE_METHODS = frozenset({"score_grid", "score_batch", "score_pairs",
+                             "latency", "objective", "edge_latencies",
+                             "block_until_ready"})
+
+#: sanctioned batched device→host transfers: their RESULTS are host values
+_HOST_TRANSFERS = frozenset({"jax.device_get"})
+
+#: jnp ops whose output shape depends on VALUES — incompatible with jit /
+#: Pallas static shapes
+_DYNAMIC_SHAPE_OPS = frozenset({"jax.numpy.nonzero", "jax.numpy.flatnonzero",
+                                "jax.numpy.argwhere", "jax.numpy.unique"})
+
+#: float64-producing dtype spellings (jax.numpy constructors silently
+#: downcast or warn under the default x64-disabled config)
+_F64_NAMES = frozenset({"numpy.float64", "jax.numpy.float64"})
+
+
+def _target_names(t) -> set[str]:
+    out: set[str] = set()
+    for node in ast.walk(t):
+        if isinstance(node, ast.Name):
+            out.add(node.id)
+    return out
+
+
+def _bound_names(fn) -> set[str]:
+    """Names bound anywhere inside a function node: params, assignments,
+    loop/with/comprehension targets, nested defs."""
+    a = fn.args
+    names = {arg.arg for arg in (*getattr(a, "posonlyargs", ()), *a.args,
+                                 *a.kwonlyargs)}
+    if a.vararg:
+        names.add(a.vararg.arg)
+    if a.kwarg:
+        names.add(a.kwarg.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                names |= _target_names(t)
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign, ast.NamedExpr)):
+            names |= _target_names(node.target)
+        elif isinstance(node, (ast.For, ast.AsyncFor)):
+            names |= _target_names(node.target)
+        elif isinstance(node, ast.comprehension):
+            names |= _target_names(node.target)
+        elif isinstance(node, ast.withitem) and node.optional_vars:
+            names |= _target_names(node.optional_vars)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node is not fn:
+            names.add(node.name)
+    return names
+
+
+def _free_names(fn) -> set[str]:
+    """Names a lambda/def loads but does not bind (its closure)."""
+    bound = _bound_names(fn)
+    loads = {n.id for n in ast.walk(fn)
+             if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)}
+    return loads - bound
+
+
+def _jit_wrapper(ctx: LintContext, call: ast.Call) -> str | None:
+    name = ctx.resolve(call.func)
+    if name in _JIT_LIKE:
+        return name
+    if name in ("functools.partial", "partial") and call.args \
+            and ctx.resolve(call.args[0]) in _JIT_LIKE:
+        return ctx.resolve(call.args[0])
+    return None
+
+
+def _contains_device_call(ctx: LintContext, node,
+                          device_names: set[str]) -> bool:
+    """Does this expression (sub)tree produce a device value — a jax/jnp
+    call, a known dispatch method, or a name assigned from one?"""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            name = ctx.resolve(n.func)
+            if name in _HOST_TRANSFERS:
+                continue
+            if name and (name == "jax" or name.startswith("jax.")):
+                return True
+            if isinstance(n.func, ast.Attribute) \
+                    and n.func.attr in _DEVICE_METHODS:
+                return True
+        elif isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load) \
+                and n.id in device_names:
+            return True
+    return False
+
+
+def _device_names_in_scope(ctx: LintContext, scope) -> set[str]:
+    """Names assigned from jax/jnp calls or dispatch methods in a scope."""
+    out: set[str] = set()
+    for n in ast.walk(scope):
+        if not (isinstance(n, ast.Assign) and isinstance(n.value, ast.Call)):
+            continue
+        name = ctx.resolve(n.value.func)
+        devicey = (name and name.startswith("jax.")
+                   and name not in _HOST_TRANSFERS) or (
+            isinstance(n.value.func, ast.Attribute)
+            and n.value.func.attr in _DEVICE_METHODS)
+        if devicey:
+            for t in n.targets:
+                out |= _target_names(t)
+    return out
+
+
+# -- rule 1: no-silent-retrace ------------------------------------------------
+
+@rule("no-silent-retrace", severity="error",
+      summary="jit wrappers built per loop iteration or closing over "
+              "call-varying Python scalars retrace/recompile silently")
+def check_no_silent_retrace(ctx: LintContext):
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        wrapper = _jit_wrapper(ctx, node)
+        if wrapper is None:
+            continue
+        if ctx.in_traced(node):
+            continue  # inside a trace everything is one compile unit
+        fn_arg = node.args[0] if node.args else None
+
+        # (a) jitted closure capturing an enclosing loop variable: every
+        # distinct value compiles a fresh executable (constant-folded in)
+        if isinstance(fn_arg, ast.Lambda):
+            frees = _free_names(fn_arg)
+            captured = set()
+            for loop in ctx.enclosing_loops(node):
+                if isinstance(loop, (ast.For, ast.AsyncFor)):
+                    captured |= _target_names(loop.target) & frees
+            if captured:
+                yield (node, f"{wrapper} closes over loop variable(s) "
+                             f"{sorted(captured)} — each value bakes in as "
+                             f"a constant and compiles a fresh executable; "
+                             f"pass them as traced arguments instead")
+                continue
+
+        # (b) wrapper constructed inside a loop
+        if ctx.in_loop(node):
+            invariant = isinstance(fn_arg, ast.Name) and not any(
+                fn_arg.id in _bound_names_of_loop(loop)
+                for loop in ctx.enclosing_loops(node))
+            if invariant:
+                yield (node, f"{wrapper}({fn_arg.id}) inside a loop re-wraps "
+                             f"a loop-invariant function — every iteration "
+                             f"gets a fresh callable with an empty compile "
+                             f"cache; hoist the jit outside the loop")
+            else:
+                yield (node, f"{wrapper} inside a loop compiles once per "
+                             f"iteration; hoist it if the function is "
+                             f"loop-invariant, or suppress if per-iteration "
+                             f"compilation is intended", "warning")
+
+
+def _bound_names_of_loop(loop) -> set[str]:
+    names = set()
+    if isinstance(loop, (ast.For, ast.AsyncFor)):
+        names |= _target_names(loop.target)
+    for stmt in ast.walk(loop):
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                names |= _target_names(t)
+        elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+            names |= _target_names(stmt.target)
+    return names
+
+
+# -- rule 2: dtype-discipline -------------------------------------------------
+
+_ORACLE_SUFFIXES = ("core/costmodel.py",)
+
+
+@rule("dtype-discipline", severity="error",
+      summary="float64 leaks in jnp twins, np/jnp mixing in traced code, "
+              "float32 inside the float64 scalar oracles")
+def check_dtype_discipline(ctx: LintContext):
+    path = ctx.path.replace("\\", "/")
+    in_oracle = path.endswith(_ORACLE_SUFFIXES)
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Attribute):
+            name = ctx.resolve(node)
+            if name == "jax.numpy.float64":
+                yield (node, "jnp.float64 in a batched twin — the stack "
+                             "runs x64-disabled, so this silently degrades "
+                             "to float32 (or warns); the float64 contract "
+                             "belongs to the numpy oracle only")
+            elif in_oracle and name and name.endswith(".float32"):
+                yield (node, "float32 inside a float64 scalar-oracle module "
+                             "— the oracle is the precision reference the "
+                             "batched twins are tested against")
+        elif isinstance(node, ast.Constant) and node.value == "float32" \
+                and in_oracle:
+            yield (node, "float32 dtype string inside a float64 "
+                         "scalar-oracle module")
+        elif isinstance(node, (ast.Import, ast.ImportFrom)) and in_oracle:
+            mods = [a.name for a in node.names] if isinstance(
+                node, ast.Import) else [node.module or ""]
+            if any(m == "jax" or m.startswith("jax.") for m in mods):
+                yield (node, "jax import inside a scalar-oracle module — "
+                             "oracles stay pure float64 numpy; put jnp "
+                             "twins in their own module")
+        elif isinstance(node, ast.Call):
+            name = ctx.resolve(node.func)
+            if name and name.startswith("jax.numpy."):
+                for kw in node.keywords:
+                    if kw.arg == "dtype" and _is_f64(ctx, kw.value):
+                        yield (kw.value, f"{name.replace('jax.numpy.', 'jnp.')}"
+                                         f"(dtype=float64) — x64 is disabled; "
+                                         f"the twin must stay float32")
+                if name in ("jax.numpy.asarray", "jax.numpy.array") \
+                        and len(node.args) > 1 and _is_f64(ctx, node.args[1]):
+                    yield (node.args[1], "float64 dtype passed to a jnp "
+                                         "constructor — x64 is disabled; "
+                                         "the twin must stay float32")
+            elif name and name.startswith("numpy.") \
+                    and not name.startswith("numpy.random.") \
+                    and ctx.in_traced(node):
+                yield (node, f"np call ({name.replace('numpy.', 'np.')}) "
+                             f"inside traced code — numpy executes at trace "
+                             f"time on tracers it cannot see (silent "
+                             f"constant-folding or a concretization error); "
+                             f"use the jnp twin")
+
+
+def _is_f64(ctx: LintContext, node) -> bool:
+    if isinstance(node, ast.Constant):
+        return node.value == "float64"
+    return ctx.resolve(node) in _F64_NAMES
+
+
+# -- rule 3: jit-purity -------------------------------------------------------
+
+@rule("jit-purity", severity="error",
+      summary="Python side effects inside traced functions run at trace "
+              "time only — prints, registry writes, attribute mutation")
+def check_jit_purity(ctx: LintContext):
+    # bound-name cache per traced scope chain
+    bound_cache: dict = {}
+
+    def locals_of(node) -> set[str]:
+        """Union of names bound by every enclosing function up to (and
+        including) the outermost traced one — values created during the
+        trace, which are fair game to mutate."""
+        chain = []
+        for anc in ctx.ancestors(node):
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                chain.append(anc)
+        key = tuple(id(f) for f in chain)
+        if key not in bound_cache:
+            names: set[str] = set()
+            for f in chain:
+                names |= _bound_names(f)
+            bound_cache[key] = names
+        return bound_cache[key]
+
+    for node in ast.walk(ctx.tree):
+        if not ctx.in_traced(node):
+            continue
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id == "print":
+            yield (node, "print() inside a traced function fires at trace "
+                         "time only (once per compilation, not per call); "
+                         "use jax.debug.print or hoist it")
+        elif isinstance(node, (ast.Global, ast.Nonlocal)):
+            kw = "global" if isinstance(node, ast.Global) else "nonlocal"
+            yield (node, f"{kw} write inside a traced function mutates "
+                         f"Python state at trace time only — the compiled "
+                         f"executable never re-runs it")
+        elif isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                if isinstance(t, ast.Attribute) and \
+                        isinstance(t.value, ast.Name):
+                    base = t.value.id
+                    if base in ("self", "cls") or base not in locals_of(node):
+                        yield (t, f"attribute write `{base}.{t.attr} = ...` "
+                                  f"inside a traced function mutates host "
+                                  f"state at trace time — it will NOT "
+                                  f"happen on later cached calls")
+        elif isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr in _MUTATORS:
+            recv = node.func.value
+            # functional updates x.at[i].add(...) are pure — exempt
+            if isinstance(recv, ast.Subscript) and \
+                    isinstance(recv.value, ast.Attribute) and \
+                    recv.value.attr == "at":
+                continue
+            if isinstance(recv, ast.Name):
+                if recv.id not in locals_of(node):
+                    yield (node, f"`.{node.func.attr}()` on closed-over "
+                                 f"`{recv.id}` inside a traced function — "
+                                 f"the mutation happens at trace time only; "
+                                 f"thread state through function returns")
+            elif isinstance(recv, ast.Call):
+                yield (node, f"`.{node.func.attr}()` on a call result "
+                             f"inside a traced function (registry/metric "
+                             f"write?) — side effects are dropped on "
+                             f"cached executions; record metrics outside "
+                             f"the traced region (repro.obs pattern: guard "
+                             f"at the dispatch site, not in the trace)")
+
+
+# -- rule 4: hidden-host-sync -------------------------------------------------
+
+@rule("hidden-host-sync", severity="error",
+      summary=".item()/float()/np.asarray() on device values inside hot "
+              "loops serializes every iteration on a device→host transfer")
+def check_hidden_host_sync(ctx: LintContext):
+    if not ctx.imports_module("jax"):
+        return
+    scope_cache: dict = {}
+
+    def device_names(node) -> set[str]:
+        scope = ctx.enclosing_function(node) or ctx.tree
+        key = id(scope)
+        if key not in scope_cache:
+            scope_cache[key] = _device_names_in_scope(ctx, scope)
+        return scope_cache[key]
+
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call) and ctx.in_loop(node)):
+            continue
+        if ctx.in_traced(node):
+            continue  # inside a trace there is no host to sync to
+        # x.item() / x.block_until_ready() on a device-derived value
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in ("item", "block_until_ready"):
+            if _contains_device_call(ctx, node.func.value,
+                                     device_names(node)):
+                yield (node, f"`.{node.func.attr}()` inside a loop forces a "
+                             f"device→host sync every iteration — batch the "
+                             f"values and transfer once after the loop")
+            elif node.func.attr == "item":
+                yield (node, "`.item()` inside a loop — if the receiver "
+                             "lives on device this syncs every iteration",
+                       "warning")
+            continue
+        name = ctx.resolve(node.func)
+        is_cast = isinstance(node.func, ast.Name) \
+            and node.func.id in ("float", "int", "bool")
+        is_np_pull = name in ("numpy.asarray", "numpy.array")
+        if not (is_cast or is_np_pull) or not node.args:
+            continue
+        if _contains_device_call(ctx, node.args[0], device_names(node)):
+            what = node.func.id if is_cast else name.replace("numpy.", "np.")
+            yield (node, f"`{what}(...)` on a device value inside a loop is "
+                         f"a hidden host sync per iteration — keep the loop "
+                         f"on device (vmap/lax) or transfer once afterwards")
+
+
+# -- rule 5: rng-discipline ---------------------------------------------------
+
+@rule("rng-discipline", severity="error",
+      summary="global numpy/stdlib rng state and jax PRNG key reuse break "
+              "seed-for-seed reproducibility")
+def check_rng_discipline(ctx: LintContext):
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = ctx.resolve(node.func)
+        if not name:
+            continue
+        if name.startswith("numpy.random.") \
+                and name.split(".")[-1] in _LEGACY_NP_RANDOM:
+            yield (node, f"np.random.{name.split('.')[-1]}() draws from "
+                         f"GLOBAL rng state — every generator takes an "
+                         f"explicit np.random.Generator (rng=) so traces "
+                         f"are seed-for-seed reproducible and rng-stream "
+                         f"compatible")
+        elif name.startswith("random.") and "random" in ctx.imports \
+                and ctx.imports["random"] == "random":
+            yield (node, f"stdlib {name}() draws from global rng state — "
+                         f"pass an explicit np.random.Generator instead")
+
+    # PRNG key reuse: a key consumed by two samplers without a split
+    scopes = [n for n in ast.walk(ctx.tree)
+              if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    scopes.append(ctx.tree)
+    seen_fns: set[int] = set()
+    for scope in scopes:
+        yield from _check_key_reuse(ctx, scope, seen_fns)
+
+
+def _walk_scope(scope):
+    """Walk a scope WITHOUT descending into nested function definitions —
+    each function gets its own key-reuse scan (no double reporting)."""
+    stack = list(ast.iter_child_nodes(scope))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def _check_key_reuse(ctx: LintContext, scope, seen_fns: set[int]):
+    if id(scope) in seen_fns:
+        return
+    seen_fns.add(id(scope))
+    events: list[tuple] = []  # (line, col, kind, name, node)
+    for node in _walk_scope(scope):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            vname = ctx.resolve(node.value.func)
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    kind = "key" if vname in ("jax.random.PRNGKey",
+                                              "jax.random.key") else "other"
+                    events.append((node.lineno, node.col_offset, "assign",
+                                   t.id, kind))
+        elif isinstance(node, ast.Call):
+            cname = ctx.resolve(node.func)
+            if not (cname and cname.startswith("jax.random.")):
+                continue
+            if cname.split(".")[-1] in _KEY_SAFE:
+                continue
+            for arg in node.args[:1]:  # key is the first positional arg
+                if isinstance(arg, ast.Name):
+                    events.append((node.lineno, node.col_offset, "use",
+                                   arg.id, node))
+    events.sort(key=lambda e: (e[0], e[1]))
+    used_once: dict[str, bool] = {}
+    for line, col, kind, name, extra in events:
+        if kind == "assign":
+            used_once[name] = False if extra == "key" else None
+        elif kind == "use" and used_once.get(name) is not None:
+            if used_once.get(name):
+                yield ((line, col + 1),
+                       f"PRNG key `{name}` consumed by a second sampler "
+                       f"without jax.random.split — reused keys emit "
+                       f"IDENTICAL randomness across the two draws")
+            elif name in used_once:
+                used_once[name] = True
+
+
+# -- rule 6: pallas-constraints ----------------------------------------------
+
+@rule("pallas-constraints", severity="error",
+      summary="Pallas grid/BlockSpec shape mismatches and dynamic-shape "
+              "ops that cannot compile to a static kernel")
+def check_pallas_constraints(ctx: LintContext):
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = ctx.resolve(node.func)
+        if name in _DYNAMIC_SHAPE_OPS and (ctx.in_traced(node)
+                                           or ctx.in_kernel(node)):
+            yield (node, f"{name.replace('jax.numpy.', 'jnp.')} has a "
+                         f"value-dependent output shape — inside jit/Pallas "
+                         f"this fails to trace (or forces host fallback); "
+                         f"use masking (jnp.where with a fill value) with "
+                         f"a static shape")
+            continue
+        if name == "jax.numpy.where" and len(node.args) == 1 \
+                and (ctx.in_traced(node) or ctx.in_kernel(node)):
+            yield (node, "single-argument jnp.where returns value-dependent "
+                         "shapes — use the three-argument masking form "
+                         "inside traced/kernel code")
+            continue
+        if not (name and name.endswith("pallas_call")):
+            continue
+        grid_len = None
+        for kw in node.keywords:
+            if kw.arg == "grid" and isinstance(kw.value, ast.Tuple):
+                grid_len = len(kw.value.elts)
+                for el in ast.walk(kw.value):
+                    if isinstance(el, ast.BinOp) and \
+                            isinstance(el.op, ast.Div):
+                        yield (el, "true division `/` inside a Pallas grid "
+                                   "expression yields a float — grids are "
+                                   "integer step counts; use `//` after "
+                                   "padding the axis to a multiple of the "
+                                   "block")
+        for kw in node.keywords:
+            if kw.arg not in ("in_specs", "out_specs"):
+                continue
+            for spec in ast.walk(kw.value):
+                if not (isinstance(spec, ast.Call)
+                        and isinstance(spec.func, (ast.Attribute, ast.Name))
+                        and (spec.func.attr if isinstance(
+                            spec.func, ast.Attribute) else
+                            spec.func.id) == "BlockSpec"):
+                    continue
+                block_len = None
+                if spec.args and isinstance(spec.args[0], ast.Tuple):
+                    block_len = len(spec.args[0].elts)
+                if len(spec.args) > 1 and isinstance(spec.args[1],
+                                                     ast.Lambda):
+                    lam = spec.args[1]
+                    n_params = len(lam.args.args)
+                    if grid_len is not None and n_params != grid_len:
+                        yield (spec, f"BlockSpec index_map takes {n_params} "
+                                     f"arg(s) but the grid has {grid_len} "
+                                     f"dimension(s) — one index per grid "
+                                     f"axis")
+                    if block_len is not None and \
+                            isinstance(lam.body, ast.Tuple) and \
+                            len(lam.body.elts) != block_len:
+                        yield (spec, f"BlockSpec block_shape has "
+                                     f"{block_len} dim(s) but its index_map "
+                                     f"returns {len(lam.body.elts)} — the "
+                                     f"index tuple must match the block "
+                                     f"rank")

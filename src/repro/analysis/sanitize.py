@@ -1,0 +1,195 @@
+"""Runtime sanitizer — the dynamic half of ``repro.analysis``.
+
+The linter prevents invariant violations statically; this module catches
+the ones only visible at runtime: NaN/Inf escaping a batched dispatch,
+candidate batches whose dtype/shape would send XLA into an opaque retrace,
+dq values outside the model's domain, and compile-cache misses beyond a
+configured retrace budget (built on the same shape buckets
+``search.bucket_first_dispatch`` already meters).
+
+Same cost contract as ``repro.obs``: DISABLED by default, every
+instrumented site guards on one attribute read (``sanitize.state().enabled``),
+and the ENABLED overhead on the ``score_batch`` hot loop is gated <5% in
+``benchmarks/bench_analysis.py`` — with bitwise-identical argmins, because
+the checks only READ values the computation already produced.
+
+    from repro.analysis import sanitize
+
+    with sanitize.sanitized(retrace_budget=4):
+        eng.score_batch(xs, dqs)      # raises AnalysisError on violation
+
+The domain-check helpers (:func:`check_placements`, :func:`check_dq`,
+:func:`check_finite`) are plain functions so always-on call sites — the
+upfront validation in ``BatchedProblem.score_batch`` — reuse them without
+enabling the sanitizer.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+import numpy as np
+
+from repro.analysis.errors import AnalysisError
+
+__all__ = ["AnalysisError", "SanitizerState", "state", "enabled", "enable",
+           "disable", "sanitized", "check_placements", "check_dq",
+           "check_finite", "note_first_dispatch"]
+
+
+@dataclasses.dataclass
+class SanitizerState:
+    """Process-local switchboard; ``enabled`` is the one-attribute-read
+    hot-path guard (mirroring ``repro.obs.registry().enabled``)."""
+
+    enabled: bool = False
+    nan_check: bool = True
+    domain_check: bool = True
+    #: max number of distinct shape-bucket first-dispatches (compile-cache
+    #: misses) tolerated since enable(); None = unmetered
+    retrace_budget: int | None = None
+    first_dispatches: int = 0
+
+
+_state = SanitizerState()
+
+
+def state() -> SanitizerState:
+    return _state
+
+
+def enabled() -> bool:
+    return _state.enabled
+
+
+def enable(retrace_budget: int | None = None, nan_check: bool = True,
+           domain_check: bool = True) -> None:
+    """Arm the sanitizer (resets the retrace-budget accounting)."""
+    _state.enabled = True
+    _state.nan_check = nan_check
+    _state.domain_check = domain_check
+    _state.retrace_budget = retrace_budget
+    _state.first_dispatches = 0
+
+
+def disable() -> None:
+    _state.enabled = False
+    _state.retrace_budget = None
+    _state.first_dispatches = 0
+
+
+@contextlib.contextmanager
+def sanitized(retrace_budget: int | None = None, nan_check: bool = True,
+              domain_check: bool = True):
+    """Enable for the duration of a block; restores the prior state."""
+    prior = dataclasses.replace(_state)
+    enable(retrace_budget=retrace_budget, nan_check=nan_check,
+           domain_check=domain_check)
+    try:
+        yield _state
+    finally:
+        _state.enabled = prior.enabled
+        _state.nan_check = prior.nan_check
+        _state.domain_check = prior.domain_check
+        _state.retrace_budget = prior.retrace_budget
+        _state.first_dispatches = prior.first_dispatches
+
+
+# -- domain checks (plain functions: usable without enabling) -----------------
+
+def check_placements(xs: np.ndarray, n_ops: int, n_devices: int, *,
+                     bucket=None, finite: bool = False) -> None:
+    """Validate a candidate batch BEFORE it reaches the jitted grid.
+
+    Shape must be (..., n_ops, n_devices) and the dtype real-numeric —
+    anything else would hand XLA a fresh abstract signature and surface as
+    an opaque retrace (or a crash deep inside the dispatch).  ``finite=True``
+    additionally rejects NaN/Inf entries (placement rows are probability
+    masses; non-finite mass silently poisons every downstream objective).
+    """
+    xs = np.asarray(xs)
+    if xs.dtype == object or not (np.issubdtype(xs.dtype, np.floating)
+                                  or np.issubdtype(xs.dtype, np.integer)
+                                  or np.issubdtype(xs.dtype, np.bool_)):
+        raise AnalysisError(
+            "score-batch-domain",
+            f"candidate batch dtype {xs.dtype} is not real-numeric — XLA "
+            f"would retrace (or fail) on an opaque abstract signature",
+            bucket=bucket, dtype=str(xs.dtype))
+    if xs.ndim < 2 or xs.shape[-2:] != (n_ops, n_devices):
+        raise AnalysisError(
+            "score-batch-domain",
+            f"candidate batch shape {xs.shape} does not end in "
+            f"(n_ops, n_devices) = ({n_ops}, {n_devices}) — a mis-shaped "
+            f"batch dispatches into a fresh shape bucket and retraces",
+            bucket=bucket, shape=tuple(xs.shape))
+    if finite and not np.isfinite(xs).all():
+        bad = int(np.size(xs) - np.isfinite(xs).sum())
+        raise AnalysisError(
+            "score-batch-domain",
+            f"candidate batch carries {bad} non-finite entr(ies) — "
+            f"placement mass must be finite",
+            bucket=bucket, n_nonfinite=bad)
+
+
+def check_dq(dq, *, bucket=None) -> None:
+    """dq_fraction lives in [0, 1]: the fraction of rows degraded away."""
+    if type(dq) is float or type(dq) is int:  # hot-path scalar fast path
+        if 0.0 <= dq <= 1.0:
+            return
+    arr = np.asarray(dq, dtype=np.float64)
+    # NaN propagates through min/max and fails both comparisons, so two
+    # scalar reductions cover range AND the non-finite case without
+    # allocating boolean temporaries (this runs on every score_batch)
+    if arr.size and not (arr.min() >= 0.0 and arr.max() <= 1.0):
+        raise AnalysisError(
+            "dq-domain",
+            f"dq_fraction outside [0, 1] (or non-finite): "
+            f"min={float(arr.min()) if arr.size else 0}, "
+            f"max={float(arr.max()) if arr.size else 0}",
+            bucket=bucket)
+
+
+def check_finite(name: str, arr, *, allow_inf: bool = True,
+                 bucket=None) -> None:
+    """NaN (and optionally Inf) guard on a dispatch output.  ``allow_inf``
+    defaults True because +inf is the legitimate infeasible marker."""
+    a = np.asarray(arr)
+    # single-pass screen: any NaN poisons the sum, and Inf survives it,
+    # so a finite sum proves the whole array clean (float dtypes cannot
+    # overflow a float64 accumulation to Inf unless an Inf-scale value
+    # is already present — which the precise pass below then finds)
+    s = float(a.sum(dtype=np.float64)) if a.size else 0.0
+    if s - s == 0.0 and allow_inf:
+        return
+    if np.isnan(a).any():
+        raise AnalysisError(
+            "nan-guard",
+            f"{name} produced {int(np.isnan(a).sum())} NaN(s)",
+            name=name, bucket=bucket)
+    if not allow_inf and np.isinf(a).any():
+        raise AnalysisError(
+            "nan-guard",
+            f"{name} produced {int(np.isinf(a).sum())} Inf(s)",
+            name=name, bucket=bucket)
+
+
+def note_first_dispatch(bucket) -> None:
+    """Record a shape-bucket compile-cache miss; trips the retrace budget.
+
+    Called by ``BatchedProblem`` exactly where the
+    ``search.bucket_first_dispatch`` metric increments, so the static
+    budget and the telemetry agree on what counts as a retrace.
+    """
+    if not _state.enabled or _state.retrace_budget is None:
+        return
+    _state.first_dispatches += 1
+    if _state.first_dispatches > _state.retrace_budget:
+        raise AnalysisError(
+            "no-silent-retrace",
+            f"retrace budget exceeded: {_state.first_dispatches} shape-"
+            f"bucket first-dispatches > budget {_state.retrace_budget} — "
+            f"candidate batches are leaking new padded shapes (warm the "
+            f"buckets up front or fix the proposal source)",
+            bucket=bucket, budget=_state.retrace_budget)

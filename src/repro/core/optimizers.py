@@ -226,7 +226,9 @@ def projected_gradient(prob: PlacementProblem, steps: int = 400,
                 f = f + cap_penalty * jnp.sum(over ** 2)
             return f
 
-        grad_fn = jax.jit(jax.value_and_grad(loss))
+        # each temperature is a DIFFERENT smoothed program; the per-temp
+        # compile is intentional and metered by `dispatches` below
+        grad_fn = jax.jit(jax.value_and_grad(loss))  # repro: ignore[no-silent-retrace]
         m = (jnp.zeros_like(z), jnp.zeros_like(w))
         v = (jnp.zeros_like(z), jnp.zeros_like(w))
         params = (z, w)

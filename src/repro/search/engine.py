@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.analysis import sanitize
 from repro.core.devices import ExplicitFleet, RegionFleet, RegionFleetFamily
 from repro.core.optimizers import PlacementProblem
 from repro.search.decision import dq_caps_mask, split_dq_term
@@ -113,25 +114,30 @@ class BatchedProblem:
         placements = pack_placements(list(xs))
         obj = self.prob.objectives
         self.dispatches += 1
+        first = bucket not in self._seen_buckets
         reg = obs.registry()
         if reg.enabled:
             reg.counter("search.dispatches").add(1)
             reg.counter("search.candidates").add(b)
             reg.histogram("search.candidates_per_dispatch", lo=1.0).observe(b)
-            if bucket not in self._seen_buckets:
+            if first:
                 # a fresh padded shape: this dispatch retraces/compiles
                 # (visible as jax.compiles too, but this names the bucket)
                 reg.counter("search.bucket_first_dispatch",
                             bucket=str(bucket)).add(1)
         self._seen_buckets.add(bucket)
+        if first and sanitize.state().enabled:
+            # same event the telemetry meters — trips the retrace budget
+            sanitize.note_first_dispatch(bucket)
         if obj is None:
             raw = self._ev.score_grid(placements, self._pack,
-                                      dq=0.0, beta=0.0)
+                                      dq=0.0, beta=0.0, guard_output=False)
         else:
             speed = None if self._speed is None or \
                 isinstance(self._pack, RegionFleetFamily) else self._speed
             raw = self._ev.score_grid(placements, self._pack, dq=0.0,
-                                      beta=0.0, objectives=obj, speed=speed)
+                                      beta=0.0, objectives=obj, speed=speed,
+                                      guard_output=False)
         lat, rest, _ = split_dq_term(raw)       # (1, B) grids, S == 1
         return lat[0, :b], rest[0, :b]
 
@@ -145,7 +151,30 @@ class BatchedProblem:
             lat, rest = self._raw_chunk(xs[lo:lo + self.chunk])
             lats.append(lat)
             rests.append(rest)
-        return np.concatenate(lats), np.concatenate(rests)
+        lat_all, rest_all = np.concatenate(lats), np.concatenate(rests)
+        san = sanitize.state()
+        if san.enabled and san.nan_check:
+            # guard AFTER the host transfer concatenate already forces —
+            # checking per chunk inside _raw_chunk would sync the device
+            # early and forfeit async-dispatch overlap (measurably slower
+            # than the check itself)
+            self._guard_outputs(lat_all, rest_all)
+        return lat_all, rest_all
+
+    def _guard_outputs(self, lat: np.ndarray, rest: np.ndarray) -> None:
+        """NaN guard on the assembled raw values; the offending chunk's
+        shape bucket is recovered from the first NaN index (error path
+        only — the clean path is two ``isnan().any()`` host scans)."""
+        for name, arr in (("score_batch.latency", lat),
+                          ("score_batch.rest", rest)):
+            s = float(arr.sum()) if arr.size else 0.0
+            if s == s:          # NaN anywhere poisons the sum
+                continue
+            if np.isnan(arr).any():
+                idx = int(np.isnan(arr).argmax())
+                lo = (idx // self.chunk) * self.chunk
+                bucket = _bucket(min(arr.shape[0] - lo, self.chunk))
+                sanitize.check_finite(name, arr, bucket=bucket)
 
     # -- feasibility ----------------------------------------------------------
     def feasible_mask(self, placements: np.ndarray,
@@ -160,11 +189,27 @@ class BatchedProblem:
     # -- the joint (placement × dq) score grid --------------------------------
     def score_batch(self, placements, dqs) -> np.ndarray:
         """(P, D) problem scores (∞ where infeasible) — ``prob.score`` for
-        every (candidate, dq) pair of the cross product."""
-        xs = np.asarray(placements, dtype=np.float64)
+        every (candidate, dq) pair of the cross product.
+
+        The candidate batch is validated UP FRONT: a bad dtype or shape
+        would otherwise dispatch into a fresh shape bucket and surface as
+        an opaque retrace (or an XLA error); instead a typed
+        :class:`repro.analysis.AnalysisError` names the offending bucket.
+        """
+        xs = np.asarray(placements)
+        san = sanitize.state()
+        # NaN placement mass is caught by the (cheaper) output nan-guard
+        # in _raw_chunk when the sanitizer is armed
+        sanitize.check_placements(
+            xs, self.prob.graph.n_ops, self.prob.fleet.n_devices,
+            bucket=_bucket(min(xs.shape[0] if xs.ndim >= 3 else 1,
+                               self.chunk)))
+        xs = xs.astype(np.float64, copy=False)
         if xs.ndim == 2:
             xs = xs[None]
         dq_arr = np.atleast_1d(np.asarray(dqs, dtype=np.float64))
+        if san.enabled and san.domain_check:
+            sanitize.check_dq(dq_arr)
         P, D = xs.shape[0], dq_arr.shape[0]
         self.evals += P * D
         if self.scalar_fallback:
@@ -180,9 +225,17 @@ class BatchedProblem:
         """(P,) problem scores for PAIRED (candidate_i, dq_i) inputs — one
         dq per candidate (e.g. an annealing path whose quality knob moves
         along the walk), so ``evals`` counts P, not a P×D cross product."""
-        xs = np.asarray(placements, dtype=np.float64)
+        xs = np.asarray(placements)
+        san = sanitize.state()
+        sanitize.check_placements(
+            xs, self.prob.graph.n_ops, self.prob.fleet.n_devices,
+            bucket=_bucket(min(xs.shape[0] if xs.ndim >= 3 else 1,
+                               self.chunk)))
+        xs = xs.astype(np.float64, copy=False)
         dq_arr = np.broadcast_to(
             np.asarray(dqs, dtype=np.float64), (xs.shape[0],))
+        if san.enabled and san.domain_check:
+            sanitize.check_dq(dq_arr)
         self.evals += xs.shape[0]
         if self.scalar_fallback:
             return np.array([self.prob.score(x, float(d))

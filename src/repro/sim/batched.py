@@ -46,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.analysis import sanitize
 from repro.core.costmodel import CostConfig
 from repro.core.devices import ExplicitFleet, RegionFleet, RegionFleetFamily
 from repro.core.graph import OpGraph
@@ -421,7 +422,8 @@ class BatchedEvaluator:
                              jnp.asarray(dq, jnp.float32), float(beta))
 
     def score_grid(self, placements, coms, dq=0.0, beta: float = 0.0,
-                   objectives: ObjectiveSet | None = None, speed=None):
+                   objectives: ObjectiveSet | None = None, speed=None,
+                   guard_output: bool = True):
         """Score every (scenario, placement) pair in one jitted dispatch.
 
         ``coms`` is a dense (S, V, V) stack or a RegionFleetFamily; ``dq``
@@ -443,6 +445,9 @@ class BatchedEvaluator:
             coms = jnp.asarray(coms)
         S = coms.n_scenarios if structured else coms.shape[0]
         dq_arr = self._validate_dq(dq, S)
+        san = sanitize.state()
+        if san.enabled and san.domain_check:
+            sanitize.check_dq(dq)  # host-side operand: no device round-trip
         path = "structured" if structured else "dense"
         multi = objectives is not None
         reg = obs.registry()
@@ -456,6 +461,15 @@ class BatchedEvaluator:
                                       objectives, speed, structured)
             sp.sync(out.scalarized if isinstance(out, ObjectiveGrids)
                     else out)
+        if guard_output and san.enabled and san.nan_check:
+            # jax.Array caches its host copy, so downstream np conversions
+            # don't pay this device→host transfer twice.  Callers that run
+            # their own output guard on the host copy they already make
+            # (BatchedProblem) pass guard_output=False — one guard per
+            # value, at the layer that owns the transfer
+            sanitize.check_finite(
+                "score_grid",
+                out.scalarized if isinstance(out, ObjectiveGrids) else out)
         return out
 
     def _dispatch_grid(self, placements, coms, dq_arr, beta, objectives,

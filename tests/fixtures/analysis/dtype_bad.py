@@ -1,0 +1,17 @@
+"""Fixture: triggers dtype-discipline (never imported, only linted)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def promotes_to_f64(x):
+    return jnp.asarray(x, jnp.float64)  # x64 is disabled: silent degrade
+
+
+def constructs_f64(n):
+    return jnp.zeros((n,), dtype="float64")
+
+
+@jax.jit
+def mixes_np_in_trace(x):
+    return np.maximum(x, 0.0)  # numpy runs at trace time on tracers

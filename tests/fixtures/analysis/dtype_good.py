@@ -1,0 +1,17 @@
+"""Fixture: dtype-discipline negatives — float32 twins, np outside traces."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def float32_twin(x):
+    return jnp.asarray(x, jnp.float32)
+
+
+@jax.jit
+def pure_jnp(x):
+    return jnp.maximum(x, 0.0)
+
+
+def host_side_numpy(x):
+    return np.maximum(np.asarray(x, dtype=np.float64), 0.0)

@@ -1,0 +1,24 @@
+"""Fixture: triggers hidden-host-sync (never imported, only linted)."""
+import jax
+import jax.numpy as jnp
+
+
+def float_per_iteration(f, xs):
+    total = 0.0
+    for x in xs:
+        total += float(f(jnp.asarray(x)))  # device→host sync per element
+    return total
+
+
+def item_on_device_value(xs):
+    acc = jnp.zeros(())
+    out = []
+    for x in xs:
+        out.append(acc.item())  # sync per iteration
+    return out
+
+
+def pull_per_iteration(ys):
+    import numpy as np
+    vals = jnp.asarray(ys)
+    return [np.asarray(vals) for _ in range(3)]

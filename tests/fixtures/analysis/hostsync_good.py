@@ -1,0 +1,17 @@
+"""Fixture: hidden-host-sync negatives — one batched transfer at the end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def batched_transfer(f, xs):
+    ys = [f(jnp.asarray(x)) for x in xs]
+    host = jax.device_get(ys)  # ONE sync for the whole batch
+    return [float(v) for v in host]
+
+
+def host_only_loop(rows):
+    total = 0.0
+    for r in rows:
+        total += float(np.sum(r))  # pure numpy: no device involved
+    return total

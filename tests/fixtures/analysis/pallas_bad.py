@@ -1,0 +1,31 @@
+"""Fixture: triggers pallas-constraints (never imported, only linted)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def float_grid(x, n):
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=(n / 8,),  # true division: non-integer step count
+    )(x)
+
+
+def arity_mismatch(x):
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=(4, 4),
+        in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],  # 1 arg, 2-d grid
+        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i,)),  # rank-1 index
+    )(x)
+
+
+@jax.jit
+def dynamic_shape(x):
+    return jnp.nonzero(x)  # value-dependent output shape under jit

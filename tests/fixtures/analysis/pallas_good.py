@@ -1,0 +1,24 @@
+"""Fixture: pallas-constraints negatives — padded // grids, matched specs."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def integer_grid(x, n, block):
+    padded = n + (-n) % block
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=(padded // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+    )(x)
+
+
+@jax.jit
+def static_masking(x):
+    return jnp.where(x > 0, x, 0.0)  # three-arg form: static shape

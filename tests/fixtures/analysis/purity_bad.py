@@ -1,0 +1,23 @@
+"""Fixture: triggers jit-purity (never imported, only linted)."""
+import jax
+
+TRACE_LOG = []
+
+
+@jax.jit
+def noisy(x):
+    print("tracing", x)  # fires once per compile, not per call
+    return x * 2
+
+
+@jax.jit
+def publishes(x):
+    TRACE_LOG.append(1)  # mutation happens at trace time only
+    return x + 1
+
+
+class Model:
+    @jax.jit
+    def forward(self, x):
+        self.calls = 1  # attribute write lost on cached executions
+        return x

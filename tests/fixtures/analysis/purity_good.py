@@ -1,0 +1,16 @@
+"""Fixture: jit-purity negatives — functional updates, local mutation."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def functional_update(x):
+    y = x.at[0].set(0.0)  # .at[...] is pure: exempt
+    return y.sum()
+
+
+@jax.jit
+def local_accumulator(xs):
+    parts = []
+    parts.append(xs.sum())  # trace-local list: fair game
+    return parts[0]

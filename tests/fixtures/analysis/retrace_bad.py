@@ -1,0 +1,25 @@
+"""Fixture: triggers no-silent-retrace (never imported, only linted)."""
+import jax
+
+
+def lambda_captures_loop_var(xs):
+    out = []
+    for scale in xs:
+        f = jax.jit(lambda v: v * scale)  # fresh compile per `scale`
+        out.append(f(scale))
+    return out
+
+
+def rewraps_loop_invariant(fn, xs):
+    total = 0.0
+    for x in xs:
+        g = jax.jit(fn)  # fn never changes: hoist the jit
+        total += g(x)
+    return total
+
+
+def per_iteration_program(fns, xs):
+    out = []
+    for fn, x in zip(fns, xs):
+        out.append(jax.jit(fn)(x))  # varies per iteration: warning
+    return out

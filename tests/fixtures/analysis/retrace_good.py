@@ -1,0 +1,12 @@
+"""Fixture: no-silent-retrace negatives — hoisted jits, traced args."""
+import jax
+
+
+def hoisted(fn, xs):
+    g = jax.jit(fn)
+    return [g(x) for x in xs]
+
+
+def scale_as_argument(xs):
+    f = jax.jit(lambda v, s: v * s)
+    return [f(x, s) for x, s in zip(xs, xs)]

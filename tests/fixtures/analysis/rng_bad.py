@@ -1,0 +1,18 @@
+"""Fixture: triggers rng-discipline (never imported, only linted)."""
+import jax
+import numpy as np
+
+
+def global_state_draw(n):
+    return np.random.rand(n)  # mutates GLOBAL numpy rng state
+
+
+def seeds_global_state():
+    np.random.seed(0)
+
+
+def key_reuse():
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (2,))
+    b = jax.random.uniform(key, (2,))  # second draw from the same key
+    return a, b

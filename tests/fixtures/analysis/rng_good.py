@@ -1,0 +1,19 @@
+"""Fixture: rng-discipline negatives — explicit Generators, split keys."""
+import jax
+import numpy as np
+
+
+def generator_draw(rng: np.random.Generator, n):
+    return rng.random(n)
+
+
+def fresh_generator(seed):
+    return np.random.default_rng(seed).random(3)
+
+
+def split_keys():
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (2,))
+    b = jax.random.uniform(k2, (2,))
+    return a, b

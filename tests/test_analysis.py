@@ -1,0 +1,158 @@
+"""The repro.analysis linter: every rule fires on its trigger fixture and
+stays silent on its negative twin, suppressions are honored, the JSON
+report keeps its schema, and — the regression that matters — the shipped
+``src/`` tree lints clean through the real CLI."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import RULES, lint_file, lint_paths, lint_source
+from repro.analysis.engine import DEFAULT_EXCLUDED_DIRS, iter_python_files
+from repro.analysis.__main__ import main as cli_main
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "tests" / "fixtures" / "analysis"
+
+#: rule id → (trigger fixture, minimum error count)
+RULE_FIXTURES = {
+    "no-silent-retrace": ("retrace", 2),
+    "dtype-discipline": ("dtype", 3),
+    "jit-purity": ("purity", 3),
+    "hidden-host-sync": ("hostsync", 3),
+    "rng-discipline": ("rng", 3),
+    "pallas-constraints": ("pallas", 4),
+}
+
+
+# -- rule catalog --------------------------------------------------------------
+
+def test_all_six_rules_registered():
+    assert set(RULE_FIXTURES) <= set(RULES)
+    for r in RULES.values():
+        assert r.severity in ("error", "warning")
+        assert r.summary  # every rule documents itself
+
+
+# -- per-rule trigger + negative fixtures --------------------------------------
+
+@pytest.mark.parametrize("rule_id", sorted(RULE_FIXTURES))
+def test_rule_triggers_on_bad_fixture(rule_id):
+    stem, min_errors = RULE_FIXTURES[rule_id]
+    findings, _ = lint_file(FIXTURES / f"{stem}_bad.py")
+    hits = [f for f in findings if f.rule == rule_id]
+    errors = [f for f in hits if f.severity == "error"]
+    assert len(errors) >= min_errors, [f.render() for f in findings]
+    # the fixture triggers ONLY its own rule — rules don't bleed into
+    # each other's fixtures
+    assert {f.rule for f in findings} == {rule_id}, \
+        [f.render() for f in findings]
+
+
+@pytest.mark.parametrize("rule_id", sorted(RULE_FIXTURES))
+def test_rule_silent_on_good_fixture(rule_id):
+    stem, _ = RULE_FIXTURES[rule_id]
+    findings, _ = lint_file(FIXTURES / f"{stem}_good.py")
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_retrace_severities():
+    """Loop-invariant re-wrap is an error; a per-iteration program is only
+    a warning (sometimes intended — suppressible)."""
+    findings, _ = lint_file(FIXTURES / "retrace_bad.py")
+    sev = {f.severity for f in findings}
+    assert sev == {"error", "warning"}
+
+
+# -- suppressions --------------------------------------------------------------
+
+_TRIGGER = "import numpy as np\nx = np.random.rand(3){}\n"
+
+
+def test_inline_suppression_honored():
+    findings, sup = lint_source("t.py", _TRIGGER.format(""))
+    assert [f.rule for f in findings] == ["rng-discipline"]
+    findings, sup = lint_source(
+        "t.py", _TRIGGER.format("  # repro: ignore[rng-discipline]"))
+    assert findings == [] and sup == 1
+
+
+def test_bare_and_file_level_suppression():
+    findings, sup = lint_source("t.py", _TRIGGER.format("  # repro: ignore"))
+    assert findings == [] and sup == 1
+    src = "# repro: ignore-file[rng-discipline]\n" + _TRIGGER.format("")
+    findings, sup = lint_source("t.py", src)
+    assert findings == [] and sup == 1
+
+
+def test_suppressing_one_rule_keeps_others():
+    src = ("import numpy as np\n"
+           "import jax\n"
+           "x = np.random.rand(3)  # repro: ignore[no-silent-retrace]\n")
+    findings, sup = lint_source("t.py", src)
+    # the suppression names a DIFFERENT rule: the rng finding survives
+    assert [f.rule for f in findings] == ["rng-discipline"] and sup == 0
+
+
+def test_syntax_error_is_a_finding():
+    findings, _ = lint_source("t.py", "def broken(:\n")
+    assert findings[0].rule == "syntax" and findings[0].severity == "error"
+
+
+# -- JSON report schema --------------------------------------------------------
+
+def test_json_report_schema():
+    report = lint_paths([FIXTURES / "rng_bad.py"])
+    blob = json.loads(json.dumps(report))
+    assert blob["version"] == 1
+    assert blob["files_checked"] == 1
+    assert set(blob["counts"]) == {"error", "warning", "suppressed"}
+    assert blob["counts"]["error"] >= 3
+    for row in blob["findings"]:
+        assert set(row) == {"rule", "severity", "path", "line", "col",
+                            "message"}
+        assert row["rule"] in RULES and row["line"] >= 1
+
+
+def test_fixture_dirs_excluded_by_default():
+    """`fixtures/` is skipped on directory walks (its violations are
+    deliberate) but still lintable when named as an explicit file."""
+    walked = list(iter_python_files([REPO / "tests"]))
+    assert not any("fixtures" in f.parts for f in walked)
+    assert "fixtures" in DEFAULT_EXCLUDED_DIRS
+    report = lint_paths([FIXTURES])  # directory walk: everything excluded
+    assert report["files_checked"] == 0
+
+
+# -- the CLI and the clean-tree regression -------------------------------------
+
+def test_cli_select_unknown_rule_exits_2(capsys):
+    assert cli_main(["--select", "not-a-rule", str(FIXTURES)]) == 2
+
+
+def test_cli_list_rules(capsys):
+    assert cli_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rid in RULE_FIXTURES:
+        assert rid in out
+
+
+def test_cli_bad_fixture_fails_json(capsys):
+    rc = cli_main(["--json", str(FIXTURES / "purity_bad.py")])
+    assert rc == 1
+    blob = json.loads(capsys.readouterr().out)
+    assert blob["counts"]["error"] >= 3
+
+
+def test_src_tree_lints_clean_via_module_invocation():
+    """Acceptance: ``python -m repro.analysis src/`` exits 0 — the shipped
+    tree satisfies its own invariants (CI keeps it that way)."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "src"],
+        cwd=REPO, capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 error(s)" in proc.stdout

@@ -75,9 +75,10 @@ def test_ssd_scan_chunk_invariance():
     dt = jax.nn.softplus(jax.random.normal(ks[3], (b, L, H))) * 0.5
     A = -jnp.exp(jax.random.normal(ks[4], (H,)) * 0.3)
     D = jax.random.normal(ks[5], (H,))
-    outs = [np.asarray(ops.ssd_scan(x, B, C, dt, A, D, chunk=c,
-                                    head_block=hb, interpret=True))
-            for c, hb in ((16, 4), (32, 2), (96, 1))]
+    # one batched device→host transfer for all chunkings, not one sync each
+    outs = jax.device_get([ops.ssd_scan(x, B, C, dt, A, D, chunk=c,
+                                        head_block=hb, interpret=True)
+                           for c, hb in ((16, 4), (32, 2), (96, 1))])
     np.testing.assert_allclose(outs[0], outs[1], atol=1e-4)
     np.testing.assert_allclose(outs[0], outs[2], atol=1e-4)
 

@@ -101,7 +101,9 @@ def test_mamba_chunk_invariance():
     for chunk in (4, 8, 24):
         m = build_model(cfg.replace(ssm_chunk=chunk))
         p = m.init_params(jax.random.PRNGKey(0))
-        lg, _ = jax.jit(m.forward)(p, {"tokens": toks})
+        # each chunk size builds a distinct model/program — recompiling per
+        # iteration is the point of the invariance check
+        lg, _ = jax.jit(m.forward)(p, {"tokens": toks})  # repro: ignore[no-silent-retrace]
         outs.append(np.asarray(lg))
     np.testing.assert_allclose(outs[0], outs[1], atol=2e-4)
     np.testing.assert_allclose(outs[0], outs[2], atol=2e-4)

@@ -6,6 +6,7 @@ through PlacementProblem / robust search and the score_grid dq validation."""
 
 import dataclasses
 
+import jax
 import numpy as np
 import pytest
 
@@ -111,9 +112,13 @@ def test_every_twin_matches_oracle(inst):
         res = ev.score_grid(P, pack, dq=dq, beta=beta, objectives=obj,
                             speed=speed)
         assert res.names == obj.names
-        assert np.asarray(res.scalarized).shape == (len(fleets), len(xs))
+        # one batched device→host transfer per score_grid result, not one
+        # sync per objective/grid access inside the comparison loops
+        grids, scal = jax.device_get(({n: res[n] for n in obj.names},
+                                      res.scalarized))
+        assert scal.shape == (len(fleets), len(xs))
         for name in obj.names:
-            grid = np.asarray(res[name])
+            grid = grids[name]
             for si, fleet in enumerate(fleets):
                 for pi, x in enumerate(xs):
                     want = OBJECTIVES[name].scalar(g, fleet, x,
@@ -121,13 +126,12 @@ def test_every_twin_matches_oracle(inst):
                     assert grid[si, pi] == pytest.approx(
                         want, rel=REL, abs=1e-6), (name, si, pi)
         # weighted scalarization == Σ w_k · grid_k == scalar_total oracle
-        stack = np.stack([np.asarray(res[n]) for n in obj.names])
+        stack = np.stack([grids[n] for n in obj.names])
         np.testing.assert_allclose(
-            np.asarray(res.scalarized),
+            scal,
             np.einsum("k,ksp->sp", obj.weights, stack), rtol=1e-6, atol=1e-6)
         want = obj.scalar_total(g, fleets[0], xs[0], float(dq[0]), beta, cfg)
-        assert np.asarray(res.scalarized)[0, 0] == pytest.approx(
-            want, rel=REL, abs=1e-6)
+        assert scal[0, 0] == pytest.approx(want, rel=REL, abs=1e-6)
 
 
 @given(instances())
@@ -143,8 +147,9 @@ def test_single_scenario_broadcast(inst):
                         (pack_fleets(fleets[:1]), pack_speeds(fleets[:1]))):
         res = ev.score_grid(P, pack, dq=0.4, beta=0.6, objectives=obj,
                             speed=speed)
+        grids = jax.device_get({n: res[n] for n in obj.names})
         for name in obj.names:
-            grid = np.asarray(res[name])
+            grid = grids[name]
             assert grid.shape == (1, len(xs))
             for pi, x in enumerate(xs):
                 want = OBJECTIVES[name].scalar(g, fleets[0], x, 0.4, 0.6, cfg)

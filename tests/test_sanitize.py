@@ -1,0 +1,163 @@
+"""The runtime sanitizer: typed AnalysisError on NaN/shape/dtype/domain
+violations and retrace-budget trips, state save/restore, and — the cost
+contract — bitwise-identical score_batch results with the sanitizer on."""
+
+import numpy as np
+import pytest
+
+from repro.analysis import AnalysisError, sanitize
+from repro.core import (CostConfig, ExplicitFleet, PlacementProblem,
+                        random_dag, random_placement)
+from repro.search.engine import BatchedProblem
+from repro.sim.batched import BatchedEvaluator, pack_placements
+
+
+@pytest.fixture
+def prob():
+    rng = np.random.default_rng(3)
+    g = random_dag(6, 0.5, rng)
+    lat = rng.random((5, 5))
+    com = (lat + lat.T) / 2
+    np.fill_diagonal(com, 0.0)
+    return PlacementProblem(g, ExplicitFleet(com_cost=com), beta=1.0)
+
+
+@pytest.fixture
+def xs(prob):
+    rng = np.random.default_rng(4)
+    avail = np.ones((6, 5), bool)
+    return np.stack([random_placement(6, avail, rng, 0.4)
+                     for _ in range(8)])
+
+
+DQS = np.linspace(0.0, 0.8, 4)
+
+
+# -- state machine -------------------------------------------------------------
+
+def test_disabled_by_default_and_context_restores():
+    assert not sanitize.enabled()
+    with sanitize.sanitized(retrace_budget=2) as st:
+        assert sanitize.enabled() and st.retrace_budget == 2
+        with sanitize.sanitized(retrace_budget=9):
+            assert sanitize.state().retrace_budget == 9
+        assert sanitize.state().retrace_budget == 2
+    assert not sanitize.enabled()
+    assert sanitize.state().retrace_budget is None
+
+
+def test_analysis_error_carries_rule_and_context():
+    err = AnalysisError("nan-guard", "boom", bucket=16, name="lat")
+    assert err.rule == "nan-guard"
+    assert err.context == {"bucket": 16, "name": "lat"}
+    assert "[nan-guard]" in str(err) and "bucket=16" in str(err)
+
+
+# -- domain-check helpers ------------------------------------------------------
+
+def test_check_placements_dtype_shape_nan():
+    ok = np.zeros((3, 6, 5))
+    sanitize.check_placements(ok, 6, 5)
+    with pytest.raises(AnalysisError) as ei:
+        sanitize.check_placements(np.empty((3, 4, 5)), 6, 5, bucket=4)
+    assert ei.value.rule == "score-batch-domain"
+    assert ei.value.context["bucket"] == 4
+    with pytest.raises(AnalysisError):
+        sanitize.check_placements(np.array([object()], dtype=object), 6, 5)
+    bad = ok.copy()
+    bad[0, 0, 0] = np.nan
+    sanitize.check_placements(bad, 6, 5)  # finite off: NaN passes
+    with pytest.raises(AnalysisError):
+        sanitize.check_placements(bad, 6, 5, finite=True)
+
+
+def test_check_dq_and_finite():
+    sanitize.check_dq([0.0, 0.5, 1.0])
+    for bad in ([1.5], [-0.1], [np.nan]):
+        with pytest.raises(AnalysisError) as ei:
+            sanitize.check_dq(bad)
+        assert ei.value.rule == "dq-domain"
+    sanitize.check_finite("x", [1.0, np.inf])  # inf = infeasible marker: ok
+    with pytest.raises(AnalysisError):
+        sanitize.check_finite("x", [1.0, np.inf], allow_inf=False)
+    with pytest.raises(AnalysisError) as ei:
+        sanitize.check_finite("x", [np.nan], bucket=8)
+    assert ei.value.context["bucket"] == 8
+
+
+# -- score_batch integration ---------------------------------------------------
+
+def test_score_batch_upfront_shape_validation(prob, xs):
+    bp = BatchedProblem(prob, chunk=64)
+    with pytest.raises(AnalysisError) as ei:
+        bp.score_batch(xs[:, :4, :], DQS)  # wrong n_ops
+    assert ei.value.rule == "score-batch-domain"
+    assert "bucket" in ei.value.context  # names the offending bucket
+    with pytest.raises(AnalysisError):
+        bp.score_batch(np.zeros(3), DQS)  # not even a placement batch
+    assert bp.dispatches == 0  # rejected BEFORE any dispatch
+
+
+def test_score_batch_dq_domain_when_enabled(prob, xs):
+    bp = BatchedProblem(prob, chunk=64)
+    bp.score_batch(xs, np.array([0.2, 2.0]))  # disabled: unchecked
+    with sanitize.sanitized():
+        with pytest.raises(AnalysisError) as ei:
+            bp.score_batch(xs, np.array([0.2, 2.0]))
+    assert ei.value.rule == "dq-domain"
+
+
+def test_score_batch_nan_candidates_when_enabled(prob, xs):
+    bad = xs.copy()
+    bad[0, 0, 0] = np.nan
+    bp = BatchedProblem(prob, chunk=64)
+    with sanitize.sanitized():
+        with pytest.raises(AnalysisError) as ei:
+            bp.score_batch(bad, DQS)
+    # NaN mass propagates through the dispatch and trips the output
+    # nan-guard (cheaper than scanning every candidate batch up front)
+    assert ei.value.rule == "nan-guard"
+    assert "bucket" in ei.value.context
+
+
+def test_retrace_budget_trips(prob, xs):
+    with sanitize.sanitized(retrace_budget=0):
+        with pytest.raises(AnalysisError) as ei:
+            BatchedProblem(prob, chunk=64).score_batch(xs, DQS)
+    assert ei.value.rule == "no-silent-retrace"
+    assert ei.value.context["budget"] == 0
+    # budget >= the actual bucket count: clean
+    with sanitize.sanitized(retrace_budget=4):
+        BatchedProblem(prob, chunk=64).score_batch(xs, DQS)
+
+
+def test_sanitized_scores_bitwise_identical(prob, xs):
+    base = BatchedProblem(prob, chunk=64).score_batch(xs, DQS)
+    with sanitize.sanitized(retrace_budget=8):
+        san = BatchedProblem(prob, chunk=64).score_batch(xs, DQS)
+    assert np.array_equal(base, san)  # checks only READ, never rewrite
+    assert np.argmin(base) == np.argmin(san)
+
+
+def test_score_pairs_validated(prob, xs):
+    bp = BatchedProblem(prob, chunk=64)
+    with pytest.raises(AnalysisError):
+        bp.score_pairs(xs[:, :, :3], np.full(8, 0.2))
+    out = bp.score_pairs(xs, np.full(8, 0.2))
+    assert out.shape == (8,)
+
+
+# -- score_grid integration ----------------------------------------------------
+
+def test_score_grid_dq_guard(prob, xs):
+    ev = BatchedEvaluator(prob.graph, CostConfig())
+    P = pack_placements(list(xs))
+    coms = np.asarray([prob.fleet.com_matrix()], dtype=np.float32)
+    ev.score_grid(P, coms, dq=1.7)  # disabled: analytic domain unchecked
+    with sanitize.sanitized():
+        with pytest.raises(AnalysisError) as ei:
+            ev.score_grid(P, coms, dq=1.7)
+        assert ei.value.rule == "dq-domain"
+        out = ev.score_grid(P, coms, dq=0.3)  # in-domain passes NaN guard
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(ev.score_grid(P, coms, dq=0.3)))

@@ -128,6 +128,7 @@ def test_structured_and_dense_paths_agree():
 
 def test_structured_kernel_against_ref():
     """The raw structured Pallas kernel against a jnp reference."""
+    import jax
     import jax.numpy as jnp
 
     from repro.kernels.ops import edge_latency_structured_max
@@ -142,12 +143,14 @@ def test_structured_kernel_against_ref():
         corr = jnp.asarray(rng.random((Bc, 1, V)), jnp.float32)
         out = edge_latency_structured_max(xi, xj, mass, a, corr,
                                           interpret=True)
-        t = np.einsum("ber,brv->bev", np.asarray(mass),
-                      np.broadcast_to(np.asarray(a), (B, R, V)))
-        t = t + np.broadcast_to(np.asarray(corr), (B, 1, V)) * np.asarray(xj)
-        want = (np.asarray(xi) * t).max(axis=2)
-        np.testing.assert_allclose(np.asarray(out), want, atol=1e-5,
-                                   rtol=1e-5)
+        # one batched device→host transfer per shape, not one per operand
+        out_h, xi_h, xj_h, mass_h, a_h, corr_h = jax.device_get(
+            (out, xi, xj, mass, a, corr))
+        t = np.einsum("ber,brv->bev", mass_h,
+                      np.broadcast_to(a_h, (B, R, V)))
+        t = t + np.broadcast_to(corr_h, (B, 1, V)) * xj_h
+        want = (xi_h * t).max(axis=2)
+        np.testing.assert_allclose(out_h, want, atol=1e-5, rtol=1e-5)
 
 
 def test_pack_region_fleets_rejects_mismatched_layouts():
