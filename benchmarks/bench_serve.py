@@ -1,0 +1,328 @@
+"""Serving-layer gates (BENCH_serve.json): coalescing must be free-of-error
+and the sharing must actually pay.
+
+The repro.serve claims this benchmark records and gates:
+
+  * **parity**: served scores are BITWISE identical to direct dedicated
+    ``score_grid`` calls — across interleaved tenants, mixed row counts,
+    scalar AND per-scenario dq, different β, and multi-objective raw
+    grids (padding rows never leak);
+  * **throughput**: a warm service answers ≥10⁴ mixed-shape queries/s on
+    one host (submit → drain → poll, everything included) by coalescing
+    them into a handful of padded super-batch dispatches;
+  * **sharing speedup**: the same mixed multi-tenant workload served ≥5×
+    faster than per-tenant dedicated ``BatchedEvaluator`` instances built
+    in isolated executable caches (each paying its own JIT — exactly what
+    naive per-tenant serving does);
+  * **admission**: with a tight p99 budget the service degrades/rejects
+    (typed verdicts, non-zero counts) and the observed warm dispatch p99
+    stays within the pricing-model resolution of the budget;
+  * **cache accounting**: per-bucket recompile counts and the process
+    executable-cache hit rate are reported, and a warm repeat of the
+    whole workload adds ZERO recompiles.
+
+Usage:
+  python -m benchmarks.bench_serve            # full sizes
+  python -m benchmarks.bench_serve --smoke    # small sizes (CI)
+  python -m benchmarks.bench_serve --check    # exit 1 on a failed gate
+"""
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import ExplicitFleet, ObjectiveSet, random_dag, \
+    random_placement
+from repro.serve import (AdmissionConfig, Degraded, QueryResult, Rejected,
+                         WhatIfQuery, WhatIfService)
+from repro.sim import BatchedEvaluator, fresh_cache, pack_fleets
+
+OUT_PATH = Path("BENCH_serve.json")
+
+MIN_QPS = 1e4
+MIN_SPEEDUP = 5.0
+# observed-p99 vs budget slack: quantile estimation is a factor-of-growth
+# (2×) resolution instrument, and the budget binds PREDICTED time
+P99_SLACK = 4.0
+
+FULL = dict(n_ops=5, n_dev=8, n_scen=2, n_tenants=8, n_queries=1000,
+            rows_lo=2, rows_hi=16, chunk=2048)
+SMOKE = dict(n_ops=5, n_dev=8, n_scen=2, n_tenants=4, n_queries=200,
+             rows_lo=2, rows_hi=16, chunk=1024)
+
+OBJ2 = ObjectiveSet.from_weights(latency_f=1.0, network_movement=0.05)
+
+
+def _workload(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    g = random_dag(cfg["n_ops"], edge_prob=0.6, rng=rng)
+    fleets = []
+    for _ in range(cfg["n_scen"]):
+        com = rng.uniform(0.1, 3.0, (cfg["n_dev"], cfg["n_dev"]))
+        com = (com + com.T) / 2
+        np.fill_diagonal(com, 0.0)
+        fleets.append(ExplicitFleet(com_cost=com))
+    coms = np.asarray(pack_fleets(fleets))
+
+    def placements(n):
+        return np.stack([
+            random_placement(cfg["n_ops"],
+                             np.ones((cfg["n_ops"], cfg["n_dev"]), bool),
+                             rng)
+            for _ in range(n)]).astype(np.float32)
+
+    queries = []
+    for i in range(cfg["n_queries"]):
+        rows = int(rng.integers(cfg["rows_lo"], cfg["rows_hi"] + 1))
+        dq = (rng.uniform(0.0, 0.8, cfg["n_scen"]) if i % 5 == 0
+              else float(rng.uniform(0.0, 0.8)))
+        queries.append((f"tenant{i % cfg['n_tenants']}", placements(rows),
+                        dq, float(rng.uniform(0.0, 2.0))))
+    return g, coms, placements, queries
+
+
+def _serve_all(svc, fid, queries):
+    """submit → drain → poll for every tenant; returns {query_id: result}
+    and the tickets in submission order."""
+    tickets = [svc.submit(t, fid, WhatIfQuery(kind="score", placements=x,
+                                              dq=dq, beta=beta))
+               for t, x, dq, beta in queries]
+    svc.drain()
+    results = {}
+    for t in {q[0] for q in queries}:
+        for m in svc.poll(t):
+            if isinstance(m, QueryResult):
+                results[m.query_id] = m
+    return tickets, results
+
+
+# -- gate 1: bitwise parity across the whole heterogeneous mix ----------------
+
+def _parity_row(cfg) -> dict:
+    g, coms, placements, queries = _workload(cfg, seed=1)
+    svc = WhatIfService(g, admission=AdmissionConfig(p99_budget_s=1e6),
+                        max_chunk_rows=64)   # force multi-chunk streaming
+    fid = svc.register_fleet("shared", coms)
+    sample = queries[:40]
+    tickets, results = _serve_all(svc, fid, sample)
+    ev = BatchedEvaluator.shared(g)
+    checked, bitwise = 0, True
+    for (t, x, dq, beta), tk in zip(sample, tickets):
+        direct = np.asarray(ev.score_grid(x, coms, dq=dq, beta=beta),
+                            dtype=np.float32)
+        got = results[tk.query_id].scores
+        bitwise &= got.shape == direct.shape \
+            and bool(np.array_equal(got, direct))
+        checked += 1
+    # multi-objective raw-grid parity on top
+    fid_m = svc.register_fleet("shared", coms, objectives=OBJ2)
+    x = placements(9)
+    tk = svc.submit("m", fid_m, WhatIfQuery(kind="score", placements=x))
+    svc.drain()
+    res = [m for m in svc.poll("m") if isinstance(m, QueryResult)][0]
+    raw = ev.score_grid(x, coms, objectives=OBJ2)
+    multi_ok = all(
+        np.array_equal(res.grids[n], np.asarray(raw.grids[n], np.float32))
+        for n in OBJ2.names)
+    return dict(name="parity", queries_checked=checked,
+                bitwise_scores=bool(bitwise),
+                bitwise_multi_grids=bool(multi_ok),
+                ok=bool(bitwise and multi_ok))
+
+
+# -- gate 2: warm mixed-shape throughput --------------------------------------
+
+def _throughput_row(cfg) -> dict:
+    g, coms, _, queries = _workload(cfg, seed=2)
+    svc = WhatIfService(g, admission=AdmissionConfig(p99_budget_s=1e6),
+                        max_chunk_rows=cfg["chunk"])
+    fid = svc.register_fleet("shared", coms)
+    _serve_all(svc, fid, queries)        # warm pass: compiles every bucket
+    t0 = time.perf_counter()
+    tickets, results = _serve_all(svc, fid, queries)
+    seconds = time.perf_counter() - t0
+    qps = len(queries) / seconds
+    snap = svc.stats.snapshot()
+    return dict(name="throughput", queries=len(queries),
+                completed=len(results), seconds=seconds, qps=qps,
+                min_qps=MIN_QPS,
+                dispatches=sum(b["dispatches"] for b in snap["buckets"]),
+                buckets=snap["buckets"],
+                ok=bool(qps >= MIN_QPS and len(results) == len(queries)))
+
+
+# -- gate 3: sharing speedup vs per-tenant dedicated evaluators ---------------
+
+def _speedup_row(cfg) -> dict:
+    g, coms, _, queries = _workload(cfg, seed=4)
+    by_tenant = {}
+    for t, x, dq, beta in queries:
+        by_tenant.setdefault(t, []).append((x, dq, beta))
+
+    # baseline: every tenant owns a dedicated evaluator in an ISOLATED
+    # executable cache — each pays its own JIT, like naive per-tenant
+    # serving (shape-bucketed the same way, to isolate the sharing effect)
+    t0 = time.perf_counter()
+    for t, qs in by_tenant.items():
+        with fresh_cache():
+            ev = BatchedEvaluator(g)
+            for x, dq, beta in qs:
+                np.asarray(ev.score_grid(x, coms, dq=dq, beta=beta))
+    baseline_s = time.perf_counter() - t0
+
+    with fresh_cache():                      # serve pays its OWN compiles
+        svc = WhatIfService(g, admission=AdmissionConfig(p99_budget_s=1e6),
+                            max_chunk_rows=cfg["chunk"])
+        fid = svc.register_fleet("shared", coms)
+        t0 = time.perf_counter()
+        _, results = _serve_all(svc, fid, queries)
+        serve_s = time.perf_counter() - t0
+    speedup = baseline_s / serve_s
+    return dict(name="sharing_speedup", baseline_s=baseline_s,
+                serve_s=serve_s, speedup=speedup,
+                min_speedup=MIN_SPEEDUP, tenants=len(by_tenant),
+                queries=len(queries),
+                ok=bool(speedup >= MIN_SPEEDUP
+                        and len(results) == len(queries)))
+
+
+# -- gate 4: admission bounds the tail ----------------------------------------
+
+def _admission_row(cfg) -> dict:
+    g, coms, placements, _ = _workload(cfg, seed=5)
+    with fresh_cache():
+        svc = WhatIfService(g, admission=AdmissionConfig(p99_budget_s=1e6),
+                            max_chunk_rows=cfg["chunk"])
+        fid = svc.register_fleet("shared", coms)
+        # calibrate the pricer on real dispatches
+        for _ in range(3):
+            svc.submit("warm", fid, WhatIfQuery(kind="score",
+                                                placements=placements(256)))
+            svc.drain()
+        svc.poll("warm")
+        budget = svc._fleets[fid].pricer.price_s(cfg["n_scen"], 256) * 1.5
+        svc.admission = AdmissionConfig(p99_budget_s=budget, min_rows=16)
+        verdicts = {"admitted": 0, "degraded": 0, "rejected": 0}
+        for i in range(40):
+            v = svc.submit("flood", fid, WhatIfQuery(
+                kind="score", placements=placements(512)))
+            if isinstance(v, Rejected):
+                verdicts["rejected"] += 1
+            elif isinstance(v.admission, Degraded):
+                verdicts["degraded"] += 1
+            else:
+                verdicts["admitted"] += 1
+            if i % 8 == 7:
+                svc.drain()                    # let the backlog clear
+        svc.drain()
+        svc.poll("flood")
+        warm_p99 = max((b.p99_warm() for b in svc.stats.buckets()
+                        if b.warm > 0), default=float("nan"))
+        snap = svc.stats.snapshot()
+    controlled = verdicts["degraded"] + verdicts["rejected"] > 0
+    bounded = bool(np.isfinite(warm_p99) and warm_p99 <= budget * P99_SLACK)
+    return dict(name="admission", budget_s=budget, warm_p99_s=warm_p99,
+                p99_slack=P99_SLACK, verdicts=verdicts,
+                buckets=snap["buckets"],
+                ok=bool(controlled and bounded))
+
+
+# -- gate 5: executable-cache accounting + zero warm recompiles ---------------
+
+def _cache_row(cfg) -> dict:
+    # a graph this process has never seen, so the pass below is truly cold
+    g, coms, _, queries = _workload(cfg, seed=6)
+    with fresh_cache() as cache:
+        # two independently-built evaluators over the SAME graph content:
+        # instance 2 must resolve instance 1's jitted callables (the
+        # cross-instance sharing the process-wide cache exists for)
+        ev1 = BatchedEvaluator(g)
+        misses_after_first = cache.stats()["misses"]
+        ev2 = BatchedEvaluator(g)
+        stats = cache.stats()
+        cross_instance_hits = stats["hits"]
+
+        svc = WhatIfService(g, admission=AdmissionConfig(p99_budget_s=1e6),
+                            max_chunk_rows=cfg["chunk"])
+        fid = svc.register_fleet("shared", coms)
+        _serve_all(svc, fid, queries)          # cold pass compiles
+        cold_recompiles = sum(b.recompiles for b in svc.stats.buckets())
+        _serve_all(svc, fid, queries)          # warm repeat
+        snap = svc.stats.snapshot()
+        warm_recompiles = sum(
+            b["recompiles"] for b in snap["buckets"]) - cold_recompiles
+        stats = cache.stats()
+    return dict(name="cache_accounting",
+                executable_cache=stats,
+                cross_instance_hits=cross_instance_hits,
+                cold_recompiles=cold_recompiles,
+                per_bucket=[{k: b[k] for k in
+                             ("bucket", "dispatches", "recompiles",
+                              "warm_dispatches", "p50", "p99")}
+                            for b in snap["buckets"]],
+                warm_repeat_recompiles=warm_recompiles,
+                ok=bool(warm_recompiles == 0
+                        and cross_instance_hits >= misses_after_first
+                        and cold_recompiles > 0
+                        and stats["hit_rate"] > 0.0))
+
+
+def run(smoke: bool = False) -> list[str]:
+    cfg = SMOKE if smoke else FULL
+    rows = [_parity_row(cfg), _throughput_row(cfg), _speedup_row(cfg),
+            _admission_row(cfg), _cache_row(cfg)]
+    report = {"smoke": smoke, "rows": rows,
+              "all_ok": all(r["ok"] for r in rows)}
+    OUT_PATH.write_text(json.dumps(report, indent=2) + "\n")
+    out = []
+    for r in rows:
+        if r["name"] == "parity":
+            out.append(f"serve_parity,bitwise={r['bitwise_scores']},"
+                       f"multi={r['bitwise_multi_grids']},ok={r['ok']}")
+        elif r["name"] == "throughput":
+            out.append(f"serve_throughput,{r['qps']:.0f}qps,"
+                       f"gate>={MIN_QPS:.0f},ok={r['ok']}")
+        elif r["name"] == "sharing_speedup":
+            out.append(f"serve_speedup,{r['speedup']:.1f}x,"
+                       f"gate>={MIN_SPEEDUP:.0f}x,ok={r['ok']}")
+        elif r["name"] == "admission":
+            v = r["verdicts"]
+            out.append(f"serve_admission,p99={r['warm_p99_s'] * 1e3:.1f}ms,"
+                       f"budget={r['budget_s'] * 1e3:.1f}ms,"
+                       f"degraded={v['degraded']},rejected={v['rejected']},"
+                       f"ok={r['ok']}")
+        else:
+            st = r["executable_cache"]
+            out.append(f"serve_cache,hit_rate={st['hit_rate']:.2f},"
+                       f"warm_recompiles={r['warm_repeat_recompiles']},"
+                       f"ok={r['ok']}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes (CI)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless every serving gate holds: bitwise "
+                         "parity with direct score_grid, ≥1e4 mixed-shape "
+                         "queries/s, ≥5× over per-tenant dedicated "
+                         "evaluators, admission-bounded p99, zero warm "
+                         "recompiles")
+    ns = ap.parse_args()
+    for line in run(smoke=ns.smoke):
+        print(line)
+    if ns.check:
+        report = json.loads(OUT_PATH.read_text())
+        if not report["all_ok"]:
+            bad = [r["name"] for r in report["rows"] if not r["ok"]]
+            print(f"FAILED gates: {bad}", file=sys.stderr)
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

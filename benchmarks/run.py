@@ -14,7 +14,7 @@ def main() -> None:
                             bench_geo_calibration, bench_kernels, bench_obs,
                             bench_optimizers, bench_paper_example,
                             bench_roofline, bench_scaling, bench_scenarios,
-                            bench_search, bench_structured)
+                            bench_search, bench_serve, bench_structured)
     suites = [
         ("paper_example", bench_paper_example.run),
         ("dq_tradeoff", bench_dq_tradeoff.run),
@@ -23,6 +23,7 @@ def main() -> None:
         ("scenarios", bench_scenarios.run),
         ("structured", bench_structured.run),
         ("search", bench_search.run),
+        ("serve", bench_serve.run),
         ("obs", bench_obs.run),
         ("analysis", bench_analysis.run),
         ("kernels", bench_kernels.run),

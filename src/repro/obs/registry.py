@@ -108,13 +108,51 @@ class Histogram:
     def mean(self) -> float:
         return self.sum / self.count if self.count else float("nan")
 
+    def quantile(self, q: float) -> float:
+        """Estimated q-quantile from the exponential buckets.
+
+        The crossing bucket is interpolated *geometrically* (the natural
+        interpolation on a log-spaced grid: linear interpolation there
+        over-weights the bucket's top end by up to the growth factor), and
+        the estimate is clamped to the exactly-tracked [min, max] — so
+        small-count histograms degrade to honest answers instead of
+        bucket-edge artifacts, and q=0 / q=1 return min / max exactly.
+        The worst-case estimation error within a bucket is a factor of
+        ``growth`` (2× at the default), which is the resolution admission
+        control needs: budgets are set in decades, not percent."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"need 0 <= q <= 1, got {q}")
+        if self.count == 0:
+            return float("nan")
+        target = q * self.count
+        cum = 0.0
+        for i, c in enumerate(self.buckets):
+            cum += c
+            if cum >= target and c > 0:
+                frac = (target - (cum - c)) / c          # position in bucket
+                if i == 0:
+                    est = self.lo * frac                  # (0, lo] linearly
+                else:
+                    # (lo·g^(i-1), lo·g^i] — geometric interpolation
+                    est = self.lo * self.growth ** (i - 1 + frac)
+                return float(min(max(est, self.min), self.max))
+        return float(self.max)
+
+    def quantiles(self, qs=(0.5, 0.95, 0.99)) -> dict[str, float]:
+        """{"p50": ..., "p95": ..., "p99": ...} — the export admission
+        control and the benchmark suites consume."""
+        return {f"p{round(q * 100)}": self.quantile(q) for q in qs}
+
     def row(self) -> dict:
         return {"type": "histogram", "name": self.name, "labels": self.labels,
                 "count": self.count, "sum": self.sum,
                 "min": None if self.count == 0 else self.min,
                 "max": None if self.count == 0 else self.max,
                 "lo": self.lo, "growth": self.growth,
-                "buckets": list(self.buckets)}
+                "buckets": list(self.buckets),
+                **({k: v for k, v in self.quantiles().items()}
+                   if self.count else {"p50": None, "p95": None,
+                                       "p99": None})}
 
 
 class MetricsRegistry:

@@ -24,8 +24,9 @@ from repro.search.candidates import (anneal_path, chunked,
                                      transfer_neighborhood)
 from repro.search.decision import (ObjectiveScales, ParetoFront,
                                    candidate_values, dq_caps_mask,
-                                   joint_dq_scores, pareto_front, pareto_mask,
-                                   robust_select, scalarize, split_dq_term)
+                                   epsilon_constraint, joint_dq_scores,
+                                   pareto_front, pareto_mask, robust_select,
+                                   scalarize, split_dq_term)
 from repro.search.engine import BatchedProblem
 from repro.search.robust import robust_placement, scenario_robust_search
 from repro.search.searchers import (exhaustive_search, greedy_transfer,
@@ -40,8 +41,8 @@ __all__ = [
     "BatchedProblem",
     # layer 3 — decision
     "ObjectiveScales", "ParetoFront", "candidate_values", "dq_caps_mask",
-    "joint_dq_scores", "pareto_front", "pareto_mask", "robust_select",
-    "scalarize", "split_dq_term",
+    "epsilon_constraint", "joint_dq_scores", "pareto_front", "pareto_mask",
+    "robust_select", "scalarize", "split_dq_term",
     "robust_placement", "scenario_robust_search",
     # searchers
     "exhaustive_search", "greedy_transfer", "random_search",

@@ -14,6 +14,9 @@ matrices; outputs are selections:
   * :func:`pareto_front`         — non-dominated extraction over ≥2
     objectives: the weighted sum is one point per weight vector, but the
     per-objective grids already hold the whole front;
+  * :func:`epsilon_constraint`   — minimize one objective subject to caps
+    (ε) on the others, from the same per-objective grids; ε = ∞ on every
+    other objective reduces to the single-objective argmin;
   * :class:`ObjectiveScales`     — automatic objective normalization: fit
     per-objective (offset, scale) from the sampled grid (min/range), so
     scalarization weights become dimensionless trade-off knobs instead of
@@ -35,6 +38,7 @@ __all__ = [
     "ParetoFront",
     "ObjectiveScales",
     "candidate_values",
+    "epsilon_constraint",
     "pareto_mask",
     "pareto_front",
     "scalarize",
@@ -191,6 +195,73 @@ def scalarize(values: np.ndarray, weights,
     if scales is not None:
         v = scales.apply(v)
     return v @ np.asarray(weights, dtype=np.float64)
+
+
+# -- ε-constraint selection ---------------------------------------------------
+
+def epsilon_constraint(grids_or_values, minimize: str | int,
+                       caps: dict[str, float] | None = None,
+                       scenario="worst",
+                       names: tuple[str, ...] | None = None,
+                       atol: float = 0.0) -> tuple[int, np.ndarray]:
+    """Minimize ONE objective subject to caps (ε) on the others — the
+    classic ε-constraint scalarization, next to the weighted sum.
+
+    Where a weighted scalarization asks "what is one unit of WAN traffic
+    worth in latency?", the ε-constraint asks the question operators
+    actually pose: "minimize latency, but never move more than ε bytes".
+    It reuses the per-objective (S, P) grids ONE ``score_grid`` dispatch
+    already produced (an :class:`~repro.core.objectives.ObjectiveGrids`,
+    or a plain (P, K) value matrix with ``names``) — no extra dispatches,
+    same as :func:`pareto_front`.
+
+    ``minimize`` is an objective name (or column index); ``caps`` maps
+    other objective names to their ε bounds — objectives absent from
+    ``caps`` are unconstrained (ε = ∞), so ``caps=None`` reduces exactly
+    to the single-objective argmin over the ``minimize`` column (property
+    tested).  ``scenario`` picks the row like :func:`candidate_values`
+    ("worst" = the conservative envelope, an int = that scenario).
+
+    Returns ``(index, masked (P,) scores)`` where infeasible candidates
+    hold +inf and ``index`` is the first-occurrence argmin.  When NO
+    candidate satisfies every cap, every score is +inf and ``index`` is 0
+    — callers distinguish "infeasible" via ``np.isinf(scores[index])``
+    (the serving layer turns that into a typed response)."""
+    if hasattr(grids_or_values, "grids"):
+        values = candidate_values(grids_or_values, scenario)
+        names = tuple(grids_or_values.names)
+    else:
+        values = np.asarray(grids_or_values, dtype=np.float64)
+        if values.ndim != 2:
+            raise ValueError(f"values must be (P, K), got {values.shape}")
+        names = tuple(names) if names is not None else \
+            tuple(f"objective_{k}" for k in range(values.shape[1]))
+    if isinstance(minimize, str):
+        if minimize not in names:
+            raise ValueError(f"minimize={minimize!r} not among {names}")
+        k_min = names.index(minimize)
+    else:
+        k_min = int(minimize)
+        if not 0 <= k_min < len(names):
+            raise ValueError(f"minimize index {k_min} out of range "
+                             f"for {len(names)} objectives")
+    caps = dict(caps or {})
+    unknown = set(caps) - set(names)
+    if unknown:
+        raise ValueError(f"caps name unknown objectives {sorted(unknown)}; "
+                         f"choose from {names}")
+    if names[k_min] in caps:
+        raise ValueError(f"cannot cap the minimized objective "
+                         f"{names[k_min]!r} — drop it from caps")
+    cap_vec = np.array([caps.get(n, np.inf) for n in names],
+                      dtype=np.float64)
+    # a cap of +inf is satisfied by any finite value AND by +inf cells
+    # (an unconstrained objective can never infeasible-ize a candidate)
+    with np.errstate(invalid="ignore"):
+        ok = (values <= cap_vec[None, :] + atol) | np.isinf(cap_vec)[None, :]
+    feasible = ok.all(axis=1)
+    scores = np.where(feasible, values[:, k_min], np.inf)
+    return int(np.argmin(scores)), scores
 
 
 # -- min–max robust selection -------------------------------------------------

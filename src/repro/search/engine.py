@@ -70,7 +70,11 @@ class BatchedProblem:
     # re-solve the same problem shape against CHANGING fleets — the
     # closed-loop controller re-optimizing after every recalibration — keep
     # one evaluator so its jitted grid functions compile once, not per
-    # reconfiguration (the fleet pack is data, not part of the trace)
+    # reconfiguration (the fleet pack is data, not part of the trace).
+    # None ⇒ BatchedEvaluator.shared(): equal-content problems across
+    # BatchedProblem instances resolve to ONE evaluator through the
+    # process-wide executable cache (repro.sim.execache), so a second
+    # engine over an identically-specified problem never recompiles
     evaluator: BatchedEvaluator | None = None
 
     def __post_init__(self):
@@ -84,8 +88,8 @@ class BatchedProblem:
         if self.scalar_fallback:
             return
         self._ev = self.evaluator if self.evaluator is not None else \
-            BatchedEvaluator(self.prob.graph, self.prob.cost_cfg,
-                             use_pallas=self.use_pallas)
+            BatchedEvaluator.shared(self.prob.graph, self.prob.cost_cfg,
+                                    use_pallas=self.use_pallas)
         fleet = self.prob.fleet
         if isinstance(fleet, RegionFleet):
             self._pack = RegionFleetFamily.from_fleets([fleet])

@@ -4,6 +4,8 @@ the generators → batched eval → replay pipeline)."""
 
 from repro.sim.batched import (BatchedEvaluator, pack_fleets, pack_placements,
                                pack_region_fleets, pack_speeds)
+from repro.sim.execache import (ExecutableCache, executable_cache,
+                                fresh_cache, graph_key, set_executable_cache)
 from repro.sim.replay import (ReplayReport, ReplayStep, apply_fleet_event,
                               replay_trace, robust_placement,
                               scenario_robust_search)
@@ -16,6 +18,8 @@ from repro.sim.scenarios import (MIN_ALIVE_DEVICES, Scenario, ScenarioConfig,
 __all__ = [
     "BatchedEvaluator", "pack_fleets", "pack_placements", "pack_region_fleets",
     "pack_speeds",
+    "ExecutableCache", "executable_cache", "fresh_cache", "graph_key",
+    "set_executable_cache",
     "ReplayReport", "ReplayStep", "apply_fleet_event", "replay_trace",
     "robust_placement", "scenario_robust_search",
     "MIN_ALIVE_DEVICES", "Scenario", "ScenarioConfig", "TraceEvent",

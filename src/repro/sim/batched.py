@@ -48,6 +48,7 @@ import numpy as np
 from repro import obs
 from repro.analysis import sanitize
 from repro.core.costmodel import CostConfig
+from repro.sim.execache import ExecutableCache, executable_cache, graph_key
 from repro.core.devices import ExplicitFleet, RegionFleet, RegionFleetFamily
 from repro.core.graph import OpGraph
 from repro.core.jaxmodel import (SmoothConfig, _edge_arrays, _region_factors,
@@ -59,6 +60,14 @@ from repro.core.objectives import (ObjectiveGrids, ObjectiveSet,
 
 __all__ = ["BatchedEvaluator", "pack_fleets", "pack_placements",
            "pack_region_fleets", "pack_speeds"]
+
+# instance memo behind BatchedEvaluator.shared(): one evaluator per
+# (graph content, cfg, pallas flags), so independent consumers (search
+# engines, the serving layer, examples) converge on the same instance —
+# and therefore the same compiled executables — instead of warming their
+# own.  The compiled state itself lives in repro.sim.execache either way;
+# this only spares re-deriving the static edge arrays.
+_shared_evaluators = ExecutableCache(capacity=64, name="evaluators")
 
 Fleet = ExplicitFleet | RegionFleet
 
@@ -159,15 +168,37 @@ class BatchedEvaluator:
         self._elat_single = make_edge_latencies_com_fn(
             self.graph, SmoothConfig(alpha=self.cfg.alpha),
             nz_eps=self.cfg.nz_eps)
-        self._jit_elat = jax.jit(self._elat_batched)
-        self._jit_lat = jax.jit(self._lat_batched)
-        self._jit_obj = jax.jit(self._obj_batched)
-        self._jit_grid = jax.jit(self._grid)
-        # structured fns are built lazily per family layout (the region
-        # assignment is static structure, like the graph); multi-objective
-        # grid fns per (layout, ObjectiveSet)
-        self._structured_cache: dict = {}
-        self._multi_cache: dict = {}
+        # every jitted entry point resolves through the PROCESS-WIDE
+        # executable cache (repro.sim.execache), keyed by the evaluator's
+        # semantic identity: two evaluators built over identical graphs and
+        # configs share ONE jitted function object, so jax's compilation
+        # cache hits instead of recompiling per instance.  The builder
+        # closures bind this instance, which is safe exactly because the
+        # key pins everything they read (graph content, cfg, pallas flags).
+        ek = self._eval_key = (graph_key(self.graph), self.cfg,
+                              self.use_pallas, self.interpret)
+        cache = executable_cache()
+        self._jit_elat = cache.get_or_build(
+            ("dense_elat", ek), lambda: jax.jit(self._elat_batched))
+        self._jit_lat = cache.get_or_build(
+            ("dense_lat", ek), lambda: jax.jit(self._lat_batched))
+        self._jit_obj = cache.get_or_build(
+            ("dense_obj", ek), lambda: jax.jit(self._obj_batched))
+        self._jit_grid = cache.get_or_build(
+            ("dense_grid", ek), lambda: jax.jit(self._grid))
+
+    @classmethod
+    def shared(cls, graph: OpGraph, cfg: CostConfig = CostConfig(),
+               use_pallas: bool = False,
+               interpret: bool = True) -> "BatchedEvaluator":
+        """The process-shared evaluator for this (graph, cfg, flags) —
+        equal-content graphs map to the SAME instance, so every consumer
+        (search engines, :mod:`repro.serve`, scripts) reuses one set of
+        compiled executables instead of warming its own."""
+        key = ("evaluator", graph_key(graph), cfg, use_pallas, interpret)
+        return _shared_evaluators.get_or_build(
+            key, lambda: cls(graph, cfg, use_pallas=use_pallas,
+                             interpret=interpret))
 
     # -- dense batched math (all shapes carry a leading B) -------------------
     def _elat_batched(self, x: jnp.ndarray, com: jnp.ndarray) -> jnp.ndarray:
@@ -223,13 +254,14 @@ class BatchedEvaluator:
         return (fam.region.tobytes(), fam.n_regions, float(fam.self_cost))
 
     def _structured(self, fam: RegionFleetFamily) -> _StructuredFns:
-        key = self._layout_key(fam)
-        fns = self._structured_cache.get(key)
-        if fns is None:
-            fns = self._build_structured(fam.region, fam.n_regions,
-                                         fam.self_cost)
-            self._structured_cache[key] = fns
-        return fns
+        # structured fns are built lazily per family layout (the region
+        # assignment is static structure, like the graph) and cached
+        # process-wide: same layout + same evaluator identity ⇒ same
+        # compiled executables, whichever instance asked first
+        key = ("structured", self._eval_key, self._layout_key(fam))
+        return executable_cache().get_or_build(
+            key, lambda: self._build_structured(fam.region, fam.n_regions,
+                                                fam.self_cost))
 
     def _build_structured(self, region: np.ndarray, n_regions: int,
                           self_cost: float) -> _StructuredFns:
@@ -312,8 +344,9 @@ class BatchedEvaluator:
         return grids, jnp.einsum("k,ksp->sp", weights, stacked)
 
     def _multi_dense(self, obj_set: ObjectiveSet):
-        fn = self._multi_cache.get(obj_set)
-        if fn is None:
+        # multi-objective grid fns cache per (evaluator identity,
+        # ObjectiveSet) — ObjectiveSet is hashable for exactly this
+        def build():
             builders = {s.name: s.build_dense(self.graph, self.cfg)
                         for s in obj_set.specs if s.name != "latency_f"}
             has_lat = "latency_f" in obj_set.names
@@ -334,15 +367,14 @@ class BatchedEvaluator:
                 return self._finish_multi(obj_set, raw, coms.shape[0],
                                           dq, beta, weights)
 
-            fn = jax.jit(grid)
-            self._multi_cache[obj_set] = fn
-        return fn
+            return jax.jit(grid)
+
+        return executable_cache().get_or_build(
+            ("multi_dense", self._eval_key, obj_set), build)
 
     def _multi_structured(self, fam: RegionFleetFamily,
                           obj_set: ObjectiveSet):
-        key = (self._layout_key(fam), obj_set)
-        fn = self._multi_cache.get(key)
-        if fn is None:
+        def build():
             sf = self._structured(fam)
             builders = {s.name: s.build_structured(
                             self.graph, fam.region, fam.n_regions,
@@ -366,9 +398,11 @@ class BatchedEvaluator:
                 return self._finish_multi(obj_set, raw, inters.shape[0],
                                           dq, beta, weights)
 
-            fn = jax.jit(grid)
-            self._multi_cache[key] = fn
-        return fn
+            return jax.jit(grid)
+
+        key = ("multi_structured", self._eval_key, self._layout_key(fam),
+               obj_set)
+        return executable_cache().get_or_build(key, build)
 
     @staticmethod
     def _validate_dq(dq, S: int) -> jnp.ndarray:

@@ -1,0 +1,95 @@
+"""Process-wide executable cache (repro.sim.execache): LRU semantics, the
+cross-instance recompile regression the cache exists to kill, and
+fresh_cache isolation."""
+
+import numpy as np
+import pytest
+
+from repro.core import CostConfig, ExplicitFleet, random_dag, \
+    random_placement
+from repro.obs import jaxhooks
+from repro.sim import (BatchedEvaluator, ExecutableCache, executable_cache,
+                       fresh_cache, graph_key, pack_fleets, pack_placements)
+
+
+def test_lru_eviction_order_and_counters():
+    c = ExecutableCache(capacity=2, name="t")
+    builds = []
+    get = lambda k: c.get_or_build((k,), lambda: builds.append(k) or k)
+    get("a"), get("b")
+    assert get("a") == "a" and c.stats()["hits"] == 1
+    get("c")                      # evicts "b" (least recently used)
+    assert ("b",) not in c and ("a",) in c and ("c",) in c
+    get("b")                      # rebuild
+    assert builds == ["a", "b", "c", "b"]
+    st = c.stats()
+    assert st["misses"] == 4 and st["evictions"] == 2 and len(c) == 2
+    c.clear()
+    assert len(c) == 0
+
+
+def test_fresh_cache_isolates_and_restores():
+    base = executable_cache()
+    base_len = len(base)
+    with fresh_cache() as tmp:
+        assert executable_cache() is tmp and tmp is not base
+        tmp.get_or_build(("x",), lambda: object())
+        assert len(tmp) == 1
+    assert executable_cache() is base and len(base) == base_len
+
+
+def _problem(seed=0, n_ops=5, n_dev=4, n_fleets=3):
+    rng = np.random.default_rng(seed)
+    g = random_dag(n_ops, edge_prob=0.6, rng=rng)
+    fleets = []
+    for _ in range(n_fleets):
+        com = rng.uniform(0.1, 3.0, (n_dev, n_dev))
+        com = (com + com.T) / 2
+        np.fill_diagonal(com, 0.0)
+        fleets.append(ExplicitFleet(com_cost=com))
+    xs = pack_placements([
+        random_placement(n_ops, np.ones((n_ops, n_dev), bool), rng)
+        for _ in range(6)])
+    return g, pack_fleets(fleets), xs
+
+
+def test_second_instance_never_recompiles():
+    """THE regression this PR's cache hoist fixes: two BatchedEvaluators
+    over identically-constructed graphs used to recompile everything,
+    because jax's compilation cache keys on function identity and each
+    instance owned fresh closures.  Now instance 2 resolves the SAME
+    jitted callables through the process cache: zero compiles, bitwise
+    identical grids."""
+    g, coms, xs = _problem()
+    with fresh_cache():
+        ev1 = BatchedEvaluator(g, CostConfig())
+        warm = np.asarray(ev1.score_grid(xs, coms, dq=0.2, beta=0.5))
+        # an equal-content graph built independently (same dataclasses)
+        g2 = random_dag(5, edge_prob=0.6, rng=np.random.default_rng(0))
+        assert graph_key(g2) == graph_key(g)
+        snap = jaxhooks.snapshot()
+        ev2 = BatchedEvaluator(g2, CostConfig())
+        again = np.asarray(ev2.score_grid(xs, coms, dq=0.2, beta=0.5))
+        assert snap.delta() == (0, 0.0)
+        np.testing.assert_array_equal(warm, again)
+        assert ev1._jit_grid is ev2._jit_grid
+
+
+def test_shared_returns_one_instance_per_content():
+    g, _, _ = _problem()
+    g2, _, _ = _problem()
+    a = BatchedEvaluator.shared(g)
+    assert BatchedEvaluator.shared(g2) is a
+    assert BatchedEvaluator.shared(g, CostConfig(alpha=0.5)) is not a
+
+
+def test_distinct_configs_do_not_collide():
+    """Different CostConfigs must map to different executables — a cache
+    hit across configs would silently score with the wrong alpha."""
+    g, coms, xs = _problem()
+    with fresh_cache():
+        plain = np.asarray(
+            BatchedEvaluator(g, CostConfig()).score_grid(xs, coms))
+        alpha = np.asarray(
+            BatchedEvaluator(g, CostConfig(alpha=1.0)).score_grid(xs, coms))
+    assert not np.array_equal(plain, alpha)

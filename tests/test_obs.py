@@ -242,3 +242,54 @@ def test_enabling_telemetry_never_changes_numerics():
     np.testing.assert_array_equal(res_on.x, res_off.x)
     assert res_on.F == res_off.F
     assert res_on.dq_fraction == res_off.dq_fraction
+
+
+# -- histogram quantile export ------------------------------------------------
+
+def test_histogram_quantile_basics():
+    """p50/p95/p99 from exponential buckets: estimates land within one
+    growth factor of the true quantile, q=0/q=1 hit the exactly-tracked
+    min/max, and the estimate is always clamped inside [min, max]."""
+    h = obs.Histogram("t", {}, lo=1e-6)
+    vals = [0.001 * (i + 1) for i in range(100)]     # 1ms .. 100ms
+    for v in vals:
+        h.observe(v)
+    true = np.quantile(vals, [0.5, 0.95, 0.99])
+    for q, want in zip([0.5, 0.95, 0.99], true):
+        est = h.quantile(q)
+        assert want / h.growth <= est <= want * h.growth
+        assert h.min <= est <= h.max
+    assert h.quantile(0.0) == h.min
+    assert h.quantile(1.0) == h.max
+    # monotone in q
+    qs = [h.quantile(q) for q in np.linspace(0, 1, 21)]
+    assert all(a <= b for a, b in zip(qs, qs[1:]))
+
+
+def test_histogram_quantile_edge_cases():
+    h = obs.Histogram("t", {}, lo=1e-6)
+    assert np.isnan(h.quantile(0.5))                 # empty → NaN
+    with pytest.raises(ValueError, match="0 <= q <= 1"):
+        h.quantile(1.5)
+    h.observe(0.25)
+    # single observation: every quantile IS that observation (clamping)
+    for q in (0.0, 0.5, 0.99, 1.0):
+        assert h.quantile(q) == 0.25
+    # underflow bucket: observations at/below lo still answer sanely
+    h2 = obs.Histogram("t2", {}, lo=1.0)
+    for _ in range(10):
+        h2.observe(0.5)
+    assert h2.quantile(0.5) == 0.5                   # clamped to min==max
+    d = h2.quantiles()
+    assert set(d) == {"p50", "p95", "p99"}
+
+
+def test_histogram_row_exports_quantiles(telemetry):
+    hist = telemetry.histogram("q.test", lo=1e-3)
+    assert hist.row()["p50"] is None                 # empty export
+    for v in (0.1, 0.2, 0.4):
+        hist.observe(v)
+    row = hist.row()
+    assert row["count"] == 3
+    for k in ("p50", "p95", "p99"):
+        assert row["min"] <= row[k] <= row["max"]

@@ -267,3 +267,90 @@ def test_scales_fit_degenerate_grid_is_guarded():
 def test_scales_fit_empty_sample_raises():
     with pytest.raises(ValueError, match="empty"):
         ObjectiveScales.fit(np.zeros((0, 2)))
+
+
+# -- ε-constraint selection ---------------------------------------------------
+
+@given(value_matrices())
+@settings(**SETTINGS)
+def test_epsilon_constraint_uncapped_is_argmin(inst):
+    """ε = ∞ on every other objective (caps=None) reduces EXACTLY to the
+    single-objective argmin over the minimized column — the property the
+    serving layer's ε-constraint rank mode leans on."""
+    from repro.search import epsilon_constraint
+    values, _ = inst
+    for k in range(values.shape[1]):
+        idx, scores = epsilon_constraint(values, minimize=k)
+        np.testing.assert_array_equal(scores, values[:, k])
+        assert idx == int(np.argmin(values[:, k]))
+
+
+@given(value_matrices())
+@settings(**SETTINGS)
+def test_epsilon_constraint_respects_caps(inst):
+    """Capped selection: the winner satisfies every cap, beats every other
+    feasible candidate on the minimized objective, and infeasible rows hold
+    +inf.  Relaxing a cap never worsens the optimum (monotonicity)."""
+    from repro.search import epsilon_constraint
+    values, _ = inst
+    names = tuple(f"o{k}" for k in range(values.shape[1]))
+    cap = float(np.median(values[:, 1]))
+    idx, scores = epsilon_constraint(values, minimize="o0",
+                                     caps={"o1": cap}, names=names)
+    feasible = values[:, 1] <= cap
+    assert np.all(np.isinf(scores[~feasible]))
+    np.testing.assert_array_equal(scores[feasible], values[feasible, 0])
+    if feasible.any():
+        assert feasible[idx]
+        assert scores[idx] == values[feasible, 0].min()
+    else:
+        assert np.isinf(scores[idx])
+    # monotonicity: a looser cap can only improve (or tie) the optimum
+    _, loose = epsilon_constraint(values, minimize="o0",
+                                  caps={"o1": cap * 2 + 1.0}, names=names)
+    assert loose.min() <= scores.min() or np.isinf(scores.min())
+
+
+def test_epsilon_constraint_validates_inputs():
+    from repro.search import epsilon_constraint
+    v = np.arange(6.0).reshape(3, 2)
+    names = ("a", "b")
+    with pytest.raises(ValueError, match="not among"):
+        epsilon_constraint(v, minimize="zzz", names=names)
+    with pytest.raises(ValueError, match="unknown objectives"):
+        epsilon_constraint(v, minimize="a", caps={"zzz": 1.0}, names=names)
+    with pytest.raises(ValueError, match="cannot cap the minimized"):
+        epsilon_constraint(v, minimize="a", caps={"a": 1.0}, names=names)
+
+
+def test_epsilon_constraint_from_score_grid_dispatch():
+    """End to end over ObjectiveGrids from ONE score_grid dispatch: the
+    ε-constraint pick is feasible on the worst-case envelope and optimal
+    among feasible candidates — and an impossible cap reports infeasible
+    (all-+inf scores) rather than raising."""
+    from repro.search import epsilon_constraint
+    rng = np.random.default_rng(7)
+    g = linear_graph([1.0, 0.8, 0.5, 0.9])
+    n_dev = 3
+    fleets = []
+    for _ in range(3):
+        com = rng.uniform(0.1, 2.0, (n_dev, n_dev))
+        com = (com + com.T) / 2
+        np.fill_diagonal(com, 0.0)
+        fleets.append(ExplicitFleet(com_cost=com))
+    xs = [random_placement(4, np.ones((4, n_dev), bool), rng)
+          for _ in range(8)]
+    ev = BatchedEvaluator(g)
+    from repro.sim import pack_fleets
+    grids = ev.score_grid(pack_placements(xs), pack_fleets(fleets),
+                          objectives=OBJ3)
+    values = candidate_values(grids, "worst")
+    cap = float(np.median(values[:, 1]))
+    idx, scores = epsilon_constraint(grids, minimize="latency_f",
+                                     caps={"network_movement": cap})
+    assert values[idx, 1] <= cap
+    feas = values[:, 1] <= cap
+    assert scores[idx] == values[feas, 0].min()
+    _, none = epsilon_constraint(grids, minimize="latency_f",
+                                 caps={"network_movement": -1.0})
+    assert np.all(np.isinf(none))

@@ -1,0 +1,321 @@
+"""repro.serve: coalescing correctness (bitwise parity with direct
+score_grid, padding non-leak, cross-tenant merging), streaming, typed
+admission verdicts, and per-kind post-processing parity with the decision
+layer."""
+
+import numpy as np
+import pytest
+
+from repro.core import (CostConfig, DQCoupling, ExplicitFleet, ObjectiveSet,
+                        random_dag, random_placement)
+from repro.search import (epsilon_constraint, joint_dq_scores, pareto_front,
+                          robust_select, split_dq_term)
+from repro.serve import (AdmissionConfig, Admitted, Degraded, Rejected,
+                         QueryResult, ResultChunk, WhatIfQuery,
+                         WhatIfService, fleet_digest, next_pow2, pad_rows)
+from repro.sim import BatchedEvaluator, fresh_cache, pack_fleets, \
+    pack_placements
+
+RELAXED = AdmissionConfig(p99_budget_s=1e6)     # never refuse
+OBJ2 = ObjectiveSet.from_weights(latency_f=1.0, network_movement=0.05)
+
+
+def _setup(seed=0, n_ops=5, n_dev=4, n_fleets=3):
+    rng = np.random.default_rng(seed)
+    g = random_dag(n_ops, edge_prob=0.6, rng=rng)
+    fleets = []
+    for _ in range(n_fleets):
+        com = rng.uniform(0.1, 3.0, (n_dev, n_dev))
+        com = (com + com.T) / 2
+        np.fill_diagonal(com, 0.0)
+        fleets.append(ExplicitFleet(com_cost=com))
+    coms = np.asarray(pack_fleets(fleets))
+
+    def placements(n):
+        return np.stack([
+            random_placement(n_ops, np.ones((n_ops, n_dev), bool), rng)
+            for _ in range(n)]).astype(np.float32)
+
+    return g, coms, placements
+
+
+def _result(msgs, qid):
+    (res,) = [m for m in msgs
+              if isinstance(m, QueryResult) and m.query_id == qid]
+    return res
+
+
+def test_interleaved_tenants_bitwise_parity():
+    """The core coalescing contract: many tenants, different row counts,
+    different dq (scalar AND per-scenario) and β, all merged into shared
+    padded dispatches — every tenant's scores are BITWISE what a direct
+    dedicated score_grid call returns, and exactly their own rows (no
+    padding, no neighbor rows leak)."""
+    g, coms, placements = _setup()
+    svc = WhatIfService(g, admission=RELAXED)
+    fid = svc.register_fleet("anyone", coms)
+    S = coms.shape[0]
+    queries = [
+        ("alice", placements(7), 0.3, 0.7),
+        ("bob", placements(3), 0.0, 0.0),
+        ("carol", placements(11), np.linspace(0.1, 0.8, S), 1.3),
+        ("alice", placements(2), 0.9, 0.2),
+    ]
+    tickets = [(t, svc.submit(t, fid, WhatIfQuery(
+        kind="score", placements=x, dq=dq, beta=beta)))
+        for t, x, dq, beta in queries]
+    assert all(isinstance(tk.admission, Admitted) for _, tk in tickets)
+    svc.drain()
+    mail = {t: svc.poll(t) for t in {"alice", "bob", "carol"}}
+    ev = BatchedEvaluator.shared(g)
+    for (tenant, x, dq, beta), (_, tk) in zip(queries, tickets):
+        res = _result(mail[tenant], tk.query_id)
+        direct = np.asarray(ev.score_grid(x, coms, dq=dq, beta=beta),
+                            dtype=np.float32)
+        assert res.scores.shape == (S, x.shape[0])
+        np.testing.assert_array_equal(res.scores, direct)
+
+
+def test_chunking_streams_partials_and_pads_safely():
+    """max_chunk_rows smaller than the super-batch: queries stream as
+    multiple ResultChunks whose offsets tile [0, P) exactly, concatenate
+    to the final scores, and padded buckets never leak rows."""
+    g, coms, placements = _setup()
+    svc = WhatIfService(g, admission=RELAXED, max_chunk_rows=8)
+    fid = svc.register_fleet("t", coms)
+    x = placements(13)              # spans 2 chunks: 8 + 5 (padded to 8)
+    tk = svc.submit("t", fid, WhatIfQuery(kind="score", placements=x,
+                                          dq=0.4, beta=0.6))
+    svc.drain()
+    msgs = svc.poll("t")
+    chunks = [m for m in msgs if isinstance(m, ResultChunk)]
+    res = _result(msgs, tk.query_id)
+    assert [c.offset for c in chunks] == [0, 8]
+    assert [c.rows for c in chunks] == [8, 5]
+    np.testing.assert_array_equal(
+        np.concatenate([c.scores for c in chunks], axis=1), res.scores)
+    direct = np.asarray(
+        BatchedEvaluator.shared(g).score_grid(x, coms, dq=0.4, beta=0.6),
+        dtype=np.float32)
+    np.testing.assert_array_equal(res.scores, direct)
+
+
+def test_pad_rows_contract():
+    x = np.ones((3, 2, 4), np.float32)
+    padded = pad_rows(x, 8)
+    assert padded.shape == (8, 2, 4)
+    np.testing.assert_array_equal(padded[3:], np.repeat(x[-1:], 5, axis=0))
+    assert pad_rows(x, 3) is x
+    with pytest.raises(ValueError, match="exceeds"):
+        pad_rows(x, 2)
+    assert [next_pow2(n) for n in (1, 2, 3, 9)] == [1, 2, 4, 16]
+
+
+def test_equal_fleets_coalesce_across_tenants():
+    """Two tenants registering EQUAL packs get the same fleet id (content
+    digest), and their queries ride one dispatch — while a different
+    objective set forks the coalesce key."""
+    g, coms, placements = _setup()
+    svc = WhatIfService(g, admission=RELAXED)
+    fa = svc.register_fleet("a", coms.copy())
+    fb = svc.register_fleet("b", coms.copy())
+    assert fa == fb == svc.register_fleet("c", coms)
+    assert svc.register_fleet("a", coms, objectives=OBJ2) != fa
+    svc.submit("a", fa, WhatIfQuery(kind="score", placements=placements(4)))
+    svc.submit("b", fb, WhatIfQuery(kind="score", placements=placements(4),
+                                    dq=0.5, beta=2.0))
+    svc.drain()
+    snap = svc.stats.snapshot()
+    assert len(snap["buckets"]) == 1          # ONE coalesced dispatch
+    assert snap["buckets"][0]["dispatches"] == 1
+    assert snap["buckets"][0]["queries"] == 2
+    assert snap["buckets"][0]["rows"] == 8
+
+
+def test_multi_objective_grids_parity():
+    """Multi-objective serving: raw per-objective grids are bitwise equal
+    to a direct dq=0 dispatch; the dq-finished scalarization matches the
+    device's own finish to float32 resolution (the recombination crosses
+    float64 host math, so bitwise is only guaranteed for the raw grids and
+    the single-objective path)."""
+    g, coms, placements = _setup()
+    svc = WhatIfService(g, admission=RELAXED)
+    fid = svc.register_fleet("t", coms, objectives=OBJ2)
+    x = placements(6)
+    dq, beta = 0.35, 0.8
+    tk = svc.submit("t", fid, WhatIfQuery(kind="score", placements=x,
+                                          dq=dq, beta=beta))
+    svc.drain()
+    res = _result(svc.poll("t"), tk.query_id)
+    ev = BatchedEvaluator.shared(g)
+    raw = ev.score_grid(x, coms, objectives=OBJ2)      # dq=0 raw dispatch
+    for name in OBJ2.names:
+        want = np.asarray(raw.grids[name], dtype=np.float32)
+        if name == "latency_f":
+            continue                # dq-finished below; raw parity via rest
+        np.testing.assert_array_equal(res.grids[name], want)
+    direct = ev.score_grid(x, coms, dq=dq, beta=beta, objectives=OBJ2)
+    np.testing.assert_allclose(
+        res.scores, np.asarray(direct.scalarized, dtype=np.float32),
+        rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(
+        res.grids["latency_f"],
+        np.asarray(direct.grids["latency_f"], dtype=np.float32),
+        rtol=1e-6, atol=0)
+
+
+def test_rank_pareto_joint_match_decision_layer():
+    """Per-kind post-processing == applying the decision layer directly to
+    the same served grids."""
+    g, coms, placements = _setup()
+    svc = WhatIfService(g, admission=RELAXED)
+    fid = svc.register_fleet("t", coms)
+    fid_m = svc.register_fleet("t", coms, objectives=OBJ2)
+    x = placements(9)
+    dqv = np.linspace(0.0, 0.9, 7)
+    coupling = DQCoupling(cap0=np.full(coms.shape[1], 3.0),
+                          load=np.full(coms.shape[1], 2.0))
+    t_rank = svc.submit("t", fid, WhatIfQuery(
+        kind="rank", placements=x, dq=0.2, beta=0.5, top_k=4))
+    t_par = svc.submit("t", fid_m, WhatIfQuery(kind="pareto", placements=x))
+    t_joint = svc.submit("t", fid, WhatIfQuery(
+        kind="joint", placements=x, beta=0.9, dq_values=dqv,
+        coupling=coupling))
+    svc.drain()
+    msgs = svc.poll("t")
+    ev = BatchedEvaluator.shared(g)
+
+    rank = _result(msgs, t_rank.query_id)
+    best, worst = robust_select(np.asarray(
+        ev.score_grid(x, coms, dq=0.2, beta=0.5), dtype=np.float32))
+    np.testing.assert_array_equal(rank.worst, worst)
+    assert rank.top[0] == best and len(rank.top) == 4
+
+    par = _result(msgs, t_par.query_id)
+    want_front = pareto_front(ev.score_grid(x, coms, objectives=OBJ2))
+    np.testing.assert_array_equal(par.front.indices, want_front.indices)
+
+    joint = _result(msgs, t_joint.query_id)
+    lat, rest, w_lat = split_dq_term(
+        np.asarray(ev.score_grid(x, coms), dtype=np.float32))
+    from repro.search import dq_caps_mask
+    want_scores, want_idx = joint_dq_scores(
+        lat, dqv, 0.9, rest=rest, w_lat=w_lat,
+        feasible=dq_caps_mask(x, dqv, coupling))
+    np.testing.assert_array_equal(joint.scores, want_scores)
+    np.testing.assert_array_equal(joint.dq_idx, want_idx)
+    assert joint.best == robust_select(want_scores)[0]
+
+
+def test_eps_constraint_rank_and_infeasible_flag():
+    g, coms, placements = _setup()
+    svc = WhatIfService(g, admission=RELAXED)
+    fid = svc.register_fleet("t", coms, objectives=OBJ2)
+    x = placements(8)
+    t_ok = svc.submit("t", fid, WhatIfQuery(
+        kind="rank", placements=x, minimize="latency_f",
+        eps_caps={"network_movement": 1e9}, top_k=2))
+    t_bad = svc.submit("t", fid, WhatIfQuery(
+        kind="rank", placements=x, minimize="latency_f",
+        eps_caps={"network_movement": -1.0}))
+    svc.drain()
+    msgs = svc.poll("t")
+    ok = _result(msgs, t_ok.query_id)
+    grids = BatchedEvaluator.shared(g).score_grid(x, coms, objectives=OBJ2)
+    want_idx, _ = epsilon_constraint(grids, "latency_f",
+                                     {"network_movement": 1e9})
+    assert not ok.infeasible and ok.top[0] == want_idx
+    bad = _result(msgs, t_bad.query_id)
+    assert bad.infeasible and np.all(np.isinf(bad.worst))
+
+
+def test_admission_rejects_and_degrades_typed():
+    """A zero-ish budget rejects with the price it refused; a budget that
+    fits a prefix degrades: the ticket says keep_rows/actions, and the
+    result covers exactly the kept prefix (bitwise)."""
+    g, coms, placements = _setup()
+    x = placements(64)
+    with fresh_cache():             # pricer must not see a warm cache
+        svc = WhatIfService(g, admission=AdmissionConfig(
+            p99_budget_s=0.0, allow_degrade=False))
+        fid = svc.register_fleet("t", coms)
+        verdict = svc.submit("t", fid, WhatIfQuery(kind="score",
+                                                   placements=x))
+        assert isinstance(verdict, Rejected)
+        assert verdict.predicted_s > verdict.budget_s == 0.0
+        assert "exceeds p99 budget" in verdict.reason
+        assert svc.stats.snapshot()["admission"]["rejected"] == 1
+
+    with fresh_cache():
+        svc = WhatIfService(g, admission=AdmissionConfig(p99_budget_s=1e6))
+        fid = svc.register_fleet("t", coms)
+        # warm once so the pricer is calibrated on real dispatch time,
+        # then set the budget to ~45% of the 64-row price: degrade land
+        svc.submit("t", fid, WhatIfQuery(kind="score", placements=x))
+        svc.drain()
+        svc.poll("t")
+        price = svc._fleets[fid].pricer.price_s(coms.shape[0], 64)
+        svc.admission = AdmissionConfig(p99_budget_s=price * 0.45,
+                                        min_rows=8)
+        tk = svc.submit("t", fid, WhatIfQuery(kind="score", placements=x,
+                                              dq=0.3, beta=0.7))
+        assert isinstance(tk, type(tk)) and isinstance(tk.admission,
+                                                       Degraded)
+        assert "subsample_candidates" in tk.admission.actions
+        assert tk.rows == tk.admission.keep_rows < 64
+        svc.drain()
+        res = _result(svc.poll("t"), tk.query_id)
+        direct = np.asarray(BatchedEvaluator.shared(g).score_grid(
+            x[:tk.rows], coms, dq=0.3, beta=0.7), dtype=np.float32)
+        np.testing.assert_array_equal(res.scores, direct)
+        assert res.degraded is tk.admission
+        assert svc.stats.snapshot()["admission"]["degraded"] == 1
+
+
+def test_joint_degrade_coarsens_dq_grid():
+    g, coms, placements = _setup()
+    with fresh_cache():
+        svc = WhatIfService(g, admission=AdmissionConfig(p99_budget_s=1e6))
+        fid = svc.register_fleet("t", coms)
+        x = placements(32)
+        svc.submit("t", fid, WhatIfQuery(kind="score", placements=x))
+        svc.drain(); svc.poll("t")
+        price = svc._fleets[fid].pricer.price_s(coms.shape[0], 32)
+        svc.admission = AdmissionConfig(p99_budget_s=price * 0.45,
+                                        min_rows=4, degrade_dq_steps=3)
+        tk = svc.submit("t", fid, WhatIfQuery(
+            kind="joint", placements=x, beta=0.5,
+            dq_values=np.linspace(0, 0.9, 11)))
+        assert isinstance(tk.admission, Degraded)
+        assert "coarsen_dq_grid" in tk.admission.actions
+        assert tk.dq_steps == 3
+        svc.drain()
+        res = _result(svc.poll("t"), tk.query_id)
+        assert res.dq_idx.max() <= 2
+
+
+def test_fleet_digest_is_content_addressed():
+    rng = np.random.default_rng(3)
+    a = rng.uniform(0.1, 1.0, (2, 4, 4)).astype(np.float32)
+    assert fleet_digest(a) == fleet_digest(a.copy())
+    b = a.copy()
+    b[0, 1, 2] += 1e-3
+    assert fleet_digest(a) != fleet_digest(b)
+    with pytest.raises(ValueError, match=r"\(S, V, V\)"):
+        fleet_digest(np.zeros((3, 4)))
+
+
+def test_submit_validation():
+    g, coms, placements = _setup()
+    svc = WhatIfService(g, admission=RELAXED)
+    fid = svc.register_fleet("t", coms)
+    with pytest.raises(ValueError, match="kind"):
+        WhatIfQuery(kind="nope", placements=placements(2))
+    with pytest.raises(ValueError, match="dq_values"):
+        WhatIfQuery(kind="joint", placements=placements(2))
+    with pytest.raises(ValueError, match="ObjectiveSet"):
+        svc.submit("t", fid, WhatIfQuery(kind="pareto",
+                                         placements=placements(2)))
+    with pytest.raises(ValueError, match="devices"):
+        svc.submit("t", fid, WhatIfQuery(
+            kind="score", placements=np.ones((2, 5, 9), np.float32)))
