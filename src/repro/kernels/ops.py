@@ -9,8 +9,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels.edge_latency import (edge_latency_pallas,
-                                        edge_latency_structured_pallas)
+from repro.kernels import dispatch
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
@@ -41,24 +40,29 @@ def rmsnorm(x, w, eps: float = 1e-6, interpret: bool = False):
     return rmsnorm_pallas(x, w, eps=eps, interpret=interpret)
 
 
-def edge_latency_max(x_i, x_j, com, interpret: bool = False,
-                     block_edges: int = 128):
-    """(B, E) fused ``max_u x_i·(com @ x_j)`` — see kernels/edge_latency.py.
-
-    No divisor shrinking here: the kernel pads E up to the block size, so a
-    prime E still runs one full tile instead of E degenerate ones."""
-    return edge_latency_pallas(x_i, x_j, com, block_edges=block_edges,
-                               interpret=interpret)
+def edge_latency_max(x_i, x_j, com, interpret: bool | None = None,
+                     block_edges: int | None = None,
+                     block_v: int | None = None):
+    """(B, E) fused ``max_u x_i·(com @ x_j)`` on the Pallas route — see
+    kernels/edge_latency.py.  ``interpret=None`` resolves per backend via
+    :mod:`repro.kernels.dispatch`; block shapes come from the autotune
+    table unless pinned.  No divisor shrinking: the kernel pads E up to the
+    block size, so a prime E still runs full tiles."""
+    return dispatch.edge_latency(x_i, x_j, com, use_pallas=True,
+                                 interpret=interpret,
+                                 block_edges=block_edges, block_v=block_v)
 
 
 def edge_latency_structured_max(x_i, x_j, mass, a, corr,
-                                interpret: bool = False,
-                                block_edges: int = 128):
+                                interpret: bool | None = None,
+                                block_edges: int | None = None,
+                                block_v: int | None = None):
     """(B, E) structured edge-latency max over precomputed region masses —
-    the RegionFleetFamily hot path (see kernels/edge_latency.py)."""
-    return edge_latency_structured_pallas(x_i, x_j, mass, a, corr,
-                                          block_edges=block_edges,
-                                          interpret=interpret)
+    the RegionFleetFamily hot path (kernels/edge_latency.py), dispatched
+    like :func:`edge_latency_max`."""
+    return dispatch.edge_latency_structured(
+        x_i, x_j, mass, a, corr, use_pallas=True, interpret=interpret,
+        block_edges=block_edges, block_v=block_v)
 
 
 def _largest_divisor_block(n: int, target: int) -> int:

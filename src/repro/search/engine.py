@@ -65,7 +65,7 @@ class BatchedProblem:
 
     prob: PlacementProblem
     chunk: int = 4096
-    use_pallas: bool = False
+    use_pallas: bool | None = None
     # an already-built evaluator to reuse (same graph/cfg): callers that
     # re-solve the same problem shape against CHANGING fleets — the
     # closed-loop controller re-optimizing after every recalibration — keep

@@ -86,7 +86,7 @@ def robust_placement(graph: OpGraph, scenarios, rng: np.random.Generator,
                      cfg: CostConfig = CostConfig(), beta: float = 0.0,
                      dq: float | np.ndarray = 0.0, sparsity: float = 0.5,
                      extra_candidates: list[np.ndarray] | None = None,
-                     use_pallas: bool = False,
+                     use_pallas: bool | None = None,
                      objectives: ObjectiveSet | None = None):
     """Min–max what-if selection: the placement minimizing the worst-case
     score over the scenario batch.
@@ -128,7 +128,7 @@ def _joint_robust_placement(graph: OpGraph, scenarios,
                             cfg: CostConfig, beta: float,
                             dq_values: np.ndarray, dq_coupling,
                             objectives: ObjectiveSet | None,
-                            use_pallas: bool = False):
+                            use_pallas: bool | None = None):
     """Joint (placement × dq) min–max: ONE raw dispatch at dq = 0, then the
     analytic per-scenario dq expansion.  Returns
     ``(x_best, worst, scores (S, P), dq_sel (S,) for the winner)``."""

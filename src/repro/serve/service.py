@@ -207,7 +207,8 @@ class WhatIfService:
     """
 
     def __init__(self, graph: OpGraph, cfg: CostConfig = CostConfig(),
-                 use_pallas: bool = False, interpret: bool = True,
+                 use_pallas: bool | None = None,
+                 interpret: bool | None = None,
                  admission: AdmissionConfig = AdmissionConfig(),
                  max_chunk_rows: int = 1024):
         if max_chunk_rows < 1 or max_chunk_rows & (max_chunk_rows - 1):
@@ -215,8 +216,14 @@ class WhatIfService:
                              f"got {max_chunk_rows}")
         self.graph = graph
         self.cfg = cfg
-        self.use_pallas = use_pallas
-        self.interpret = interpret
+        # kernel flags resolve ONCE through the dispatch policy (None =
+        # auto for the backend), so the service can never pin interpreted
+        # kernels on an accelerator — and the resolved booleans feed both
+        # the shared evaluator and every CoalesceKey, keeping the serving
+        # layer and sim layer on the same executables
+        from repro.kernels.dispatch import resolve_flags
+        self.use_pallas, self.interpret = resolve_flags(use_pallas,
+                                                        interpret)
         self.admission = admission
         self.max_chunk_rows = max_chunk_rows
         # evaluator resolves through the process-wide executable cache:

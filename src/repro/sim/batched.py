@@ -145,16 +145,23 @@ class BatchedEvaluator:
       score_grid(x (P,n,V), com [S scen]) -> (S, P)   — ONE dispatch
 
     ``use_pallas`` routes the inner reduction through the Pallas kernels
-    (dense bilinear-max or structured region-mass matmul;
-    ``interpret=True`` executes them on CPU, flip off on real TPUs).
+    (dense bilinear-max or structured region-mass matmul).  Both flags
+    default to ``None`` = "auto for the backend" and resolve ONCE through
+    :func:`repro.kernels.dispatch.resolve_flags` (CPU: jnp path +
+    interpret; accelerators: Pallas + compiled), so no caller silently
+    runs interpreted kernels on an accelerator or compiled mode on CPU.
+    After construction both attributes are concrete booleans.
     """
 
     graph: OpGraph
     cfg: CostConfig = CostConfig()
-    use_pallas: bool = False
-    interpret: bool = True
+    use_pallas: bool | None = None
+    interpret: bool | None = None
 
     def __post_init__(self):
+        from repro.kernels.dispatch import resolve_flags
+        self.use_pallas, self.interpret = resolve_flags(self.use_pallas,
+                                                        self.interpret)
         src, dst, sel = _edge_arrays(self.graph)
         self._src = jnp.asarray(src)
         self._dst = jnp.asarray(dst)
@@ -189,12 +196,16 @@ class BatchedEvaluator:
 
     @classmethod
     def shared(cls, graph: OpGraph, cfg: CostConfig = CostConfig(),
-               use_pallas: bool = False,
-               interpret: bool = True) -> "BatchedEvaluator":
+               use_pallas: bool | None = None,
+               interpret: bool | None = None) -> "BatchedEvaluator":
         """The process-shared evaluator for this (graph, cfg, flags) —
         equal-content graphs map to the SAME instance, so every consumer
         (search engines, :mod:`repro.serve`, scripts) reuses one set of
-        compiled executables instead of warming its own."""
+        compiled executables instead of warming its own.  Flags resolve
+        through the dispatch policy BEFORE the memo key, so ``None`` and
+        its concrete resolution map to the same instance."""
+        from repro.kernels.dispatch import resolve_flags
+        use_pallas, interpret = resolve_flags(use_pallas, interpret)
         key = ("evaluator", graph_key(graph), cfg, use_pallas, interpret)
         return _shared_evaluators.get_or_build(
             key, lambda: cls(graph, cfg, use_pallas=use_pallas,
@@ -212,8 +223,9 @@ class BatchedEvaluator:
             return jax.vmap(self._elat_single)(x, com)     # (B, E)
         x_i = x[:, self._src] * self._sel[None, :, None]   # (B, E, V)
         x_j = x[:, self._dst]                              # (B, E, V)
-        from repro.kernels.ops import edge_latency_max
-        out = edge_latency_max(x_i, x_j, com, interpret=self.interpret)
+        from repro.kernels.dispatch import edge_latency
+        out = edge_latency(x_i, x_j, com, use_pallas=True,
+                           interpret=self.interpret)
         return out + self._links_term(x, out.dtype)
 
     def _links_term(self, x: jnp.ndarray, dtype) -> jnp.ndarray:
@@ -290,12 +302,12 @@ class BatchedEvaluator:
             a, corr = jax.vmap(
                 lambda i, d: _region_factors(i, d, region_ix, self_cost)
             )(inter, degrade)                        # (Sb, R, V), (Sb, V)
-            from repro.kernels.ops import edge_latency_structured_max
-            out = edge_latency_structured_max(
+            from repro.kernels.dispatch import edge_latency_structured
+            out = edge_latency_structured(
                 x_i.astype(jnp.float32), x_j.astype(jnp.float32),
                 mass.astype(jnp.float32), a.astype(jnp.float32),
                 corr[:, None, :].astype(jnp.float32),
-                interpret=self.interpret)
+                use_pallas=True, interpret=self.interpret)
             return out + self._links_term(x, out.dtype)
 
         def lat_b(x, inter, degrade):

@@ -185,7 +185,7 @@ def robust_placement(graph: OpGraph, scenarios: list[Scenario],
                      cfg: CostConfig = CostConfig(), beta: float = 0.0,
                      dq: float | np.ndarray = 0.0, sparsity: float = 0.5,
                      extra_candidates: list[np.ndarray] | None = None,
-                     use_pallas: bool = False,
+                     use_pallas: bool | None = None,
                      objectives: ObjectiveSet | None = None):
     """Min–max what-if selection over a scenario batch — a
     signature-preserving delegator to

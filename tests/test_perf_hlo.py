@@ -84,12 +84,15 @@ def test_roofline_terms_and_dominance():
 
 
 # -- pinned against actually-compiled edge-latency kernels --------------------
-# Hand-computed costs of the paper's edge-latency contraction (B=2, E=6,
-# V=8, R=4):  dense  max_u x_i·(com @ x_j)  = 2·B·E·V² dot + B·E·V reduce;
-# structured max_u x_i·(mass @ a + corr·x_j) = 2·B·E·R·V dot + B·E·V reduce.
-# FLOPs are pinned EXACTLY (XLA's per-op cost is deterministic for these
-# contractions); HBM bytes only as >= the I/O lower bound, since
-# interpret-mode Pallas lowering adds interpreter traffic on top.
+# Costs of the paper's edge-latency contraction (B=2, E=6, V=8, R=4) as the
+# V-BLOCKED kernels actually compile it: the wrappers pad V (and R) to the
+# lane width and E to the sublane width (block_geometry is the single
+# source of truth), so the dominant dot costs 2·B·e_pad·v_pad² (dense) /
+# 2·B·e_pad·r_pad·v_pad (structured).  FLOPs are pinned to a tight band
+# around that dot — exact equality would re-pin XLA's deterministic but
+# version-dependent accounting of the elementwise mask/mul/max tail, which
+# is O(1/v_pad) of the dot.  HBM bytes only as >= the PADDED I/O lower
+# bound, since interpret-mode Pallas lowering adds interpreter traffic.
 
 _B, _E, _V, _R = 2, 6, 8, 4
 
@@ -99,29 +102,45 @@ def _kernel_hlo(fn, *shapes):
     return jax.jit(fn).lower(*args).compile().as_text()
 
 
+def _flops_band(dot: int, elementwise_outputs: int):
+    """[dot, dot + slack]: the non-dot tail is a few ops per padded output
+    element (mask compare, mul, max fold), bounded well below 8."""
+    return dot, dot + 8 * elementwise_outputs
+
+
 def test_dense_edge_latency_kernel_flops_pinned():
-    from repro.kernels.edge_latency import edge_latency_pallas
+    from repro.kernels.edge_latency import (block_geometry,
+                                            edge_latency_pallas)
 
     text = _kernel_hlo(
         lambda xi, xj, com: edge_latency_pallas(xi, xj, com, interpret=True),
         (_B, _E, _V), (_B, _E, _V), (1, _V, _V))
     s = analyze_module(text)
-    assert s.flops == 2 * _B * _E * _V * _V + _B * _E * _V
-    # I/O floor: x_i + x_j + com + out, f32
-    io_floor = 4 * (2 * _B * _E * _V + _V * _V + _B * _E)
+    g = block_geometry("dense", _E, _V, None, 128, 512)
+    lo, hi = _flops_band(2 * _B * g.e_pad * g.v_pad * g.v_pad,
+                         _B * g.e_pad * g.v_pad)
+    assert lo <= s.flops <= hi
+    # I/O floor: padded x_i + x_j + com + out, f32
+    io_floor = 4 * (2 * _B * g.e_pad * g.v_pad + g.v_pad * g.v_pad
+                    + _B * g.e_pad)
     assert s.hbm_bytes >= io_floor
 
 
 def test_structured_edge_latency_kernel_flops_pinned():
-    from repro.kernels.edge_latency import edge_latency_structured_pallas
+    from repro.kernels.edge_latency import (block_geometry,
+                                            edge_latency_structured_pallas)
 
     text = _kernel_hlo(
         lambda xi, xj, m, a, c: edge_latency_structured_pallas(
             xi, xj, m, a, c, interpret=True),
         (_B, _E, _V), (_B, _E, _V), (_B, _E, _R), (1, _R, _V), (1, 1, _V))
     s = analyze_module(text)
-    assert s.flops == 2 * _B * _E * _R * _V + _B * _E * _V
-    io_floor = 4 * (2 * _B * _E * _V + _B * _E * _R + _R * _V + _V + _B * _E)
+    g = block_geometry("structured", _E, _V, _R, 128, 512)
+    lo, hi = _flops_band(2 * _B * g.e_pad * g.r_pad * g.v_pad,
+                         _B * g.e_pad * g.v_pad)
+    assert lo <= s.flops <= hi
+    io_floor = 4 * (2 * _B * g.e_pad * g.v_pad + _B * g.e_pad * g.r_pad
+                    + g.r_pad * g.v_pad + g.v_pad + _B * g.e_pad)
     assert s.hbm_bytes >= io_floor
 
 
