@@ -10,7 +10,7 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_analysis, bench_dq_tradeoff,
+    from benchmarks import (bench_analysis, bench_belief, bench_dq_tradeoff,
                             bench_geo_calibration, bench_kernels, bench_obs,
                             bench_optimizers, bench_paper_example,
                             bench_roofline, bench_scaling, bench_scenarios,
@@ -28,6 +28,7 @@ def main() -> None:
         ("analysis", bench_analysis.run),
         ("kernels", bench_kernels.run),
         ("geo_calibration", bench_geo_calibration.run),
+        ("belief", bench_belief.run),
         ("roofline", bench_roofline.run),
     ]
     filters = [a for a in sys.argv[1:] if not a.startswith("-")]

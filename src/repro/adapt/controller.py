@@ -63,7 +63,19 @@ class AdaptiveConfig:
     must buy back its reconfiguration charge within ``amortize_ticks``
     ticks of modeled improvement.  ``beta``/``dq`` are paper eq. 8's
     quality trade-off; ``co_optimize_dq`` searches the dq grid jointly
-    with the placement in the same dispatch."""
+    with the placement in the same dispatch.
+
+    ``use_belief`` maintains an explicit :class:`repro.belief.BeliefState`
+    (refits write posterior updates into it; pass a ``prior`` to the
+    controller for cold-start priors).  On its own it is passive
+    bookkeeping — decisions and the rng stream are BITWISE identical to
+    the legacy path (pinned in tests/test_adaptive.py).  The belief starts
+    driving decisions through ``belief_sampling`` (robust scenarios are
+    posterior samples instead of fixed ``robust_jitter`` noise) and
+    ``probe_epsilon`` (probing candidates keep ε mass on high-uncertainty
+    devices, adopted when the exploration bonus justifies the price);
+    ``belief_decay`` ages observation counts per refit so stale evidence
+    relaxes toward the prior."""
 
     window: int = 6
     drift_threshold: float = 0.5
@@ -90,6 +102,14 @@ class AdaptiveConfig:
     state_bytes_per_op: float = 0.25
     amortize_ticks: float = 20.0
     row_width: int = 4
+    # belief layer (repro.belief) — all off by default: the legacy
+    # controller path stays bitwise intact
+    use_belief: bool = False
+    belief_sampling: bool = False
+    probe_epsilon: float = 0.0
+    probe_top_k: int = 2
+    prior_strength: float = 4.0
+    belief_decay: float = 0.8
 
     def __post_init__(self):
         if self.window < 2:
@@ -106,7 +126,7 @@ class AdaptiveController:
     the loop it closes.  Use :func:`run_adaptive` for the one-call form."""
 
     def __init__(self, engine, cfg: AdaptiveConfig = AdaptiveConfig(),
-                 name: str = "adaptive"):
+                 name: str = "adaptive", prior=None):
         from repro.core.devices import ExplicitFleet
         from repro.sim.batched import BatchedEvaluator
 
@@ -134,6 +154,24 @@ class AdaptiveController:
         self._evaluator_graph = self.graph
         self.controller_dispatches = 0
         self.oracle_dispatches = 0
+        # explicit belief layer (None = legacy point-estimate controller)
+        self.belief = None
+        self._pending_prior_adapt = False
+        if cfg.use_belief:
+            from repro.belief import BeliefState, apply_degrade
+
+            self.belief = BeliefState.from_fleet(
+                self.believed, graph=self.graph, prior=prior,
+                prior_strength=cfg.prior_strength)
+            if prior is not None:
+                # cold start: adopt the prior's predicted slowdowns as the
+                # initial belief (a fresh fleet is no longer assumed
+                # healthy) and re-optimize at the first observed tick
+                d0 = self.belief.posterior_mean_degrade()
+                if float(np.max(np.abs(np.log(d0)))) > 1e-9:
+                    self.believed = apply_degrade(self.believed, d0)
+                    self.belief.commit(d0)
+                    self._pending_prior_adapt = True
 
     # -- belief-side scoring --------------------------------------------------
     def _believed_latency(self, x: np.ndarray) -> float:
@@ -148,10 +186,18 @@ class AdaptiveController:
         believed fleet in ONE ``score_grid`` dispatch; the dq axis expands
         analytically (the same ``/(1 + β·dq)`` trick the search layer
         uses) and the min–max candidate wins — a placement hedged against
-        belief error, co-optimized with its quality knob.  Returns
-        (x_best, dq_best, score_best, score_incumbent)."""
+        belief error, co-optimized with its quality knob.
+
+        With the belief layer on, the scenario copies can be posterior
+        samples (``belief_sampling`` — hedging follows the posterior
+        variance instead of fixed jitter) and ``probe_epsilon`` rides
+        probing variants of the incumbent in the SAME batch (zero extra
+        dispatches), selected under an exploration bonus that discounts a
+        candidate's score by the uncertainty mass it would observe.
+        Returns (x_best, dq_best, score_best, score_incumbent)."""
         from repro.core.placement import uniform_placement
-        from repro.search.candidates import dq_grid, incumbent_candidates
+        from repro.search.candidates import (dq_grid, incumbent_candidates,
+                                             probe_candidates)
         from repro.sim.batched import pack_fleets, pack_placements
         from repro.sim.scenarios import perturbed_fleet
 
@@ -164,15 +210,28 @@ class AdaptiveController:
         avail = self.believed.availability(self.graph.n_ops)
         cands = incumbent_candidates(self.engine.x, avail, rng,
                                      cfg.n_candidates, jitter=cfg.jitter)
+        n_base = cands.shape[0]
+        std = None
+        if self.belief is not None and cfg.probe_epsilon > 0.0:
+            std = np.sqrt(self.belief.posterior_var())
+            probes = probe_candidates(self.engine.x, avail, std,
+                                      cfg.probe_epsilon, cfg.probe_top_k)
+        else:
+            probes = np.empty((0,) + self.engine.x.shape)
         cands = np.concatenate(
-            [cands, uniform_placement(self.graph.n_ops, avail)[None]])
+            [cands, probes,
+             uniform_placement(self.graph.n_ops, avail)[None]])
         if cfg.co_optimize_dq and cfg.beta > 0.0:
             dqs = dq_grid(cfg.beta, steps=cfg.dq_steps, include=(self.dq,))
         else:
             dqs = np.array([self.dq])
-        fleets = [self.believed] + [
-            perturbed_fleet(self.believed, rng, cfg.robust_jitter)
-            for _ in range(max(cfg.robust_scenarios - 1, 0))]
+        if self.belief is not None and cfg.belief_sampling:
+            fleets = [self.believed] + self.belief.sample_fleets(
+                self.believed, rng, max(cfg.robust_scenarios - 1, 0))
+        else:
+            fleets = [self.believed] + [
+                perturbed_fleet(self.believed, rng, cfg.robust_jitter)
+                for _ in range(max(cfg.robust_scenarios - 1, 0))]
         with obs.span("adapt.reoptimize", P=int(cands.shape[0]),
                       S=len(fleets), D=int(np.size(dqs))) as sp:
             lat = np.asarray(sp.sync(self._evaluator.score_grid(
@@ -184,10 +243,26 @@ class AdaptiveController:
             reg.counter("adapt.reoptimize.dispatches").add(1)
         denom = 1.0 + cfg.beta * np.asarray(dqs, dtype=np.float64)
         worst = (lat[:, :, None] / denom[None, None, :]).max(axis=0)  # (P, D)
-        i, d = divmod(int(np.argmin(worst)), worst.shape[1])
+        sel = worst
+        if std is not None and np.any(std > 0.0):
+            # exploration bonus: candidate p's score shrinks by up to ε for
+            # the fraction of posterior-std mass its placement would
+            # observe (a device counts fully once it holds ≥ ε mean mass).
+            # The bonus is the controller's price of information — it
+            # participates in BOTH selection and the amortization gate, so
+            # a probe is adopted exactly when the information is worth the
+            # move.
+            eps = float(cfg.probe_epsilon)
+            mass = cands.mean(axis=1)                      # (P, V)
+            cov = (std[None, :] * np.minimum(mass / eps, 1.0)).sum(axis=1) \
+                / std.sum()
+            sel = worst * (1.0 - eps * cov[:, None])
+        i, d = divmod(int(np.argmin(sel)), sel.shape[1])
+        if reg.enabled and n_base <= i < n_base + probes.shape[0]:
+            reg.counter("belief.probes").add(1)
         inc_d = int(np.argmin(np.abs(np.asarray(dqs) - self.dq)))
         return (np.asarray(cands[i], dtype=np.float64), float(dqs[d]),
-                float(worst[i, d]), float(worst[0, inc_d]))
+                float(sel[i, d]), float(sel[0, inc_d]))
 
     # -- truth-side scoring (regret accounting only) --------------------------
     def _true_F(self, true_graph, x: np.ndarray, dq: float) -> float:
@@ -270,6 +345,8 @@ class AdaptiveController:
                     keep = [u for u in range(self.believed.n_devices)
                             if u != idx]
                     self.believed, _ = self.believed.without_devices([idx])
+                    if self.belief is not None:
+                        self.belief = self.belief.without_devices(keep)
                     static_x = _renorm(static_x[:, keep])
                     oracle_x = _renorm(oracle_x[:, keep])
                 if applied in ("degrade", "outage", "recover", "remove"):
@@ -327,29 +404,52 @@ class AdaptiveController:
                 or pending_structural
             fast = (len(w_obs) >= 2 and np.isfinite(drift)
                     and drift > cfg.fast_factor * cfg.drift_threshold)
-            if (ticks_since_adapt >= cfg.cooldown
-                    and ((len(w_obs) >= cfg.window and triggered) or fast)):
-                pending_structural = False
-                with obs.span("adapt.refit", ticks=len(w_obs)):
-                    refit = refit_from_replay(
-                        self.believed_graph, self.believed,
-                        make_window(tail), self.cost_cfg,
-                        work_unit=self.work_unit)
-                reg = obs.registry()
-                if not np.isfinite(refit.post_drift) \
-                        or refit.post_drift <= refit.pre_drift:
-                    self.believed = refit.fleet
-                    self.com_scale = 1.0  # the refit folded the scale in
-                    if np.max(np.abs(refit.sel_scale - 1.0)) > 0.02:
-                        # material selectivity drift: adopt the re-fit graph
-                        # (the next re-optimization rebuilds its evaluator)
-                        self.believed_graph = refit.graph
-                    refit_ticks.append(ev.t)
-                    if reg.enabled:
-                        reg.counter("adapt.refits.adopted").add(1)
-                elif reg.enabled:
-                    # refit explained the window WORSE — belief kept
-                    reg.counter("adapt.refits.rejected").add(1)
+            do_adapt = (ticks_since_adapt >= cfg.cooldown
+                        and ((len(w_obs) >= cfg.window and triggered)
+                             or fast))
+            # cold-start prior adaptation: the prior predicted a degraded
+            # world, so re-optimize at the FIRST observed tick instead of
+            # waiting a full drift window (no refit — there is nothing to
+            # fit yet; one extra dispatch total)
+            initial = self._pending_prior_adapt and len(w_obs) >= 1
+            if do_adapt or initial:
+                self._pending_prior_adapt = False
+                if do_adapt:
+                    pending_structural = False
+                    if self.belief is not None:
+                        # evidence ages one adaptation epoch before the new
+                        # window lands: variance re-inflates, stale
+                        # estimates relax toward the prior
+                        self.belief.decay(cfg.belief_decay)
+                    with obs.span("adapt.refit", ticks=len(w_obs)):
+                        refit = refit_from_replay(
+                            self.believed_graph, self.believed,
+                            make_window(tail), self.cost_cfg,
+                            work_unit=self.work_unit, belief=self.belief)
+                    reg = obs.registry()
+                    if reg.enabled and self.belief is not None:
+                        reg.counter("belief.updates").add(1)
+                        reg.gauge("belief.variance").set(
+                            float(np.mean(self.belief.posterior_var())))
+                    if not np.isfinite(refit.post_drift) \
+                            or refit.post_drift <= refit.pre_drift:
+                        self.believed = refit.fleet
+                        self.com_scale = 1.0  # refit folded the scale in
+                        if self.belief is not None:
+                            self.belief.commit(refit.degrade)
+                        if np.max(np.abs(refit.sel_scale - 1.0)) > 0.02:
+                            # material selectivity drift: adopt the re-fit
+                            # graph (the next re-optimization rebuilds its
+                            # evaluator)
+                            self.believed_graph = refit.graph
+                        refit_ticks.append(ev.t)
+                        if reg.enabled:
+                            reg.counter("adapt.refits.adopted").add(1)
+                    elif reg.enabled:
+                        # refit explained the window WORSE — belief kept
+                        reg.counter("adapt.refits.rejected").add(1)
+                else:
+                    reg = obs.registry()
                 x_new, dq_new, score_new, score_inc = self._reoptimize(rng)
                 # gate on the BELIEVED price (all the controller has); the
                 # regret account below charges the TRUE price of the move
@@ -397,9 +497,12 @@ class AdaptiveController:
 
 def run_adaptive(engine, trace: list[TraceEvent], rng: np.random.Generator,
                  cfg: AdaptiveConfig = AdaptiveConfig(),
-                 name: str = "adaptive") -> RegretReport:
+                 name: str = "adaptive", prior=None) -> RegretReport:
     """Close the loop over one trace: observe → drift → refit → re-optimize
     → reconfigure, with regret accounting against the static seed placement
     and the per-world-change oracle.  One-call wrapper around
-    :class:`AdaptiveController`."""
-    return AdaptiveController(engine, cfg, name=name).run(trace, rng)
+    :class:`AdaptiveController`.  ``prior`` (a :class:`repro.belief.
+    LearnedPrior`) seeds the belief for cold starts when
+    ``cfg.use_belief``."""
+    return AdaptiveController(engine, cfg, name=name,
+                              prior=prior).run(trace, rng)

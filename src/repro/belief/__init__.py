@@ -1,0 +1,35 @@
+"""Learned cost priors with per-parameter uncertainty.
+
+The package closes ROADMAP open item 2: instead of assuming the cost
+model's per-device / per-operator parameters are known (the paper's
+setting) or learnable only for pairs the current placement happens to
+touch (PR 5's refit), it
+
+  * featurizes devices and operators (:mod:`repro.belief.features`) so a
+    ridge prior (:mod:`repro.belief.prior`) fit on replay-harvested tuples
+    transfers to never-observed pairs, and
+  * tracks an explicit posterior (:mod:`repro.belief.state`) whose
+    variance contracts with observation mass and re-inflates under age
+    decay — feeding robust search posterior samples instead of fixed
+    jitter, and telling the probing candidates which devices are worth
+    paying to observe.
+"""
+
+from repro.belief.features import (DEVICE_FEATURES, OP_FEATURES,
+                                   device_features, op_features,
+                                   speed_percentile)
+from repro.belief.prior import LearnedPrior, fit_prior, ridge_loss
+from repro.belief.state import BeliefState, apply_degrade
+
+__all__ = [
+    "DEVICE_FEATURES",
+    "OP_FEATURES",
+    "device_features",
+    "op_features",
+    "speed_percentile",
+    "LearnedPrior",
+    "fit_prior",
+    "ridge_loss",
+    "BeliefState",
+    "apply_degrade",
+]

@@ -1,0 +1,169 @@
+"""The learned cost prior: a small JAX-native ridge model over the
+(operator, device) featurization.
+
+Two independent heads, both linear in the features of
+:mod:`repro.belief.features`:
+
+  * **device head** — predicts per-device log-slowdown (``log degrade``,
+    0 = healthy) from device features;
+  * **op head** — predicts per-operator log selectivity scale (0 = the
+    nominal metadata is right) from op features.
+
+Training minimizes ONE jitted weighted ridge loss per head
+(:func:`ridge_loss`); :func:`_ridge_solve` evaluates its exact minimizer
+(normal equations) in the same jitted float32 program, so fitting is a
+single dispatch per head — no Python-side optimization loop, no retraces
+across refits (shapes are padded per call site by the caller's data, and
+the solve is jitted once at module import).
+
+The fit is *observation-count weighted*: a (device, window) tuple whose
+estimate rests on 10⁴ work·rows of busy evidence moves the prior more than
+a sliver-of-mass tuple — the same weights the belief posterior uses
+(:class:`repro.belief.state.BeliefState`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["LearnedPrior", "fit_prior", "ridge_loss"]
+
+
+def _design(x: jnp.ndarray) -> jnp.ndarray:
+    """[1 | features] design matrix (bias absorbed as the first column)."""
+    ones = jnp.ones((x.shape[0], 1), dtype=jnp.float32)
+    return jnp.concatenate([ones, x], axis=1)
+
+
+def _ridge_loss(w: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray,
+                sw: jnp.ndarray, lam: jnp.ndarray) -> jnp.ndarray:
+    """Weighted ridge loss ``Σ_n sw_n (X_n·w − y_n)² + λ‖w₁:‖²`` (the bias
+    is not penalized).  THE training objective — `_ridge_solve` returns its
+    exact minimizer."""
+    resid = _design(x) @ w - y
+    penalty = lam * jnp.sum(w[1:] ** 2)
+    return jnp.sum(sw * resid ** 2) + penalty
+
+
+def _ridge_solve(x: jnp.ndarray, y: jnp.ndarray, sw: jnp.ndarray,
+                 lam: jnp.ndarray) -> jnp.ndarray:
+    """Exact minimizer of :func:`_ridge_loss` via the weighted normal
+    equations (float32; the λ ridge keeps the system well-posed even with
+    collinear one-hot tiers)."""
+    d = _design(x)
+    g = (d * sw[:, None]).T @ d
+    reg = jnp.eye(d.shape[1], dtype=jnp.float32) * lam
+    reg = reg.at[0, 0].set(0.0)
+    rhs = (d * sw[:, None]).T @ y
+    return jnp.linalg.solve(g + reg, rhs)
+
+
+_ridge_solve_jit = jax.jit(_ridge_solve)
+_ridge_loss_jit = jax.jit(_ridge_loss)
+
+
+def ridge_loss(w: np.ndarray, feats: np.ndarray, targets: np.ndarray,
+               weights: np.ndarray, ridge: float) -> float:
+    """Host-facing view of the jitted training loss (diagnostics/tests)."""
+    return float(_ridge_loss_jit(
+        jnp.asarray(w, dtype=jnp.float32),
+        jnp.asarray(feats, dtype=jnp.float32),
+        jnp.asarray(targets, dtype=jnp.float32),
+        jnp.asarray(weights, dtype=jnp.float32),
+        jnp.asarray(ridge, dtype=jnp.float32)))
+
+
+def _fit_head(feats: np.ndarray, targets: np.ndarray, weights: np.ndarray,
+              ridge: float) -> np.ndarray:
+    x = jnp.asarray(feats, dtype=jnp.float32)
+    y = jnp.asarray(targets, dtype=jnp.float32)
+    sw = jnp.asarray(weights, dtype=jnp.float32)
+    # scale-free weights: only relative evidence matters, and normalizing
+    # keeps the float32 normal equations away from overflow for huge
+    # work-mass units
+    sw = sw / jnp.maximum(jnp.mean(sw), jnp.float32(1e-30))
+    w = _ridge_solve_jit(x, y, sw, jnp.asarray(ridge, dtype=jnp.float32))
+    return np.asarray(w, dtype=np.float64)
+
+
+@dataclasses.dataclass(frozen=True)
+class LearnedPrior:
+    """Fitted prior weights (host-side float64 copies of the float32 fit).
+
+    ``predict_*`` are pure numpy — prediction sits on the controller's
+    decision path, where a jit dispatch per tick would violate the
+    O(adaptations) dispatch budget."""
+
+    w_device: np.ndarray | None      # (F_d + 1,) → log degrade
+    w_op: np.ndarray | None          # (F_o + 1,) → log selectivity scale
+    ridge: float
+    n_device_samples: int
+    n_op_samples: int
+    # spread of the training residuals — the belief's prior variance
+    device_residual_var: float = 0.25
+    op_residual_var: float = 0.25
+
+    def predict_log_degrade(self, feats: np.ndarray) -> np.ndarray:
+        feats = np.asarray(feats, dtype=np.float64)
+        if self.w_device is None:
+            return np.zeros(feats.shape[0])
+        pred = self.w_device[0] + feats @ self.w_device[1:]
+        return np.clip(pred, np.log(1e-2), np.log(1e6))
+
+    def predict_degrade(self, feats: np.ndarray) -> np.ndarray:
+        """(V,) predicted slowdown multipliers (1 = healthy)."""
+        return np.exp(self.predict_log_degrade(feats))
+
+    def predict_log_sel_scale(self, feats: np.ndarray) -> np.ndarray:
+        feats = np.asarray(feats, dtype=np.float64)
+        if self.w_op is None:
+            return np.zeros(feats.shape[0])
+        pred = self.w_op[0] + feats @ self.w_op[1:]
+        return np.clip(pred, np.log(1e-3), np.log(1e3))
+
+    def predict_sel_scale(self, feats: np.ndarray) -> np.ndarray:
+        """(n_ops,) predicted selectivity drift scales (1 = none)."""
+        return np.exp(self.predict_log_sel_scale(feats))
+
+
+def fit_prior(device_features: np.ndarray | None = None,
+              device_log_degrade: np.ndarray | None = None,
+              device_weights: np.ndarray | None = None,
+              op_features: np.ndarray | None = None,
+              op_log_sel_scale: np.ndarray | None = None,
+              op_weights: np.ndarray | None = None,
+              ridge: float = 1e-2) -> LearnedPrior:
+    """Fit the two ridge heads from harvested training tuples
+    (:func:`repro.sim.training.training_tuples` produces them from replay
+    windows).  Either head may be absent (None / empty arrays) — the prior
+    then predicts the healthy default for that head."""
+    w_d, var_d, n_d = None, 0.25, 0
+    if device_features is not None and np.size(device_log_degrade):
+        feats = np.asarray(device_features, dtype=np.float64)
+        y = np.asarray(device_log_degrade, dtype=np.float64)
+        sw = np.ones(y.size) if device_weights is None \
+            else np.asarray(device_weights, dtype=np.float64)
+        w_d = _fit_head(feats, y, sw, ridge)
+        resid = (w_d[0] + feats @ w_d[1:]) - y
+        tot = sw.sum()
+        var_d = float((sw * resid ** 2).sum() / tot) if tot > 0 else 0.25
+        n_d = int(y.size)
+    w_o, var_o, n_o = None, 0.25, 0
+    if op_features is not None and np.size(op_log_sel_scale):
+        feats = np.asarray(op_features, dtype=np.float64)
+        y = np.asarray(op_log_sel_scale, dtype=np.float64)
+        sw = np.ones(y.size) if op_weights is None \
+            else np.asarray(op_weights, dtype=np.float64)
+        w_o = _fit_head(feats, y, sw, ridge)
+        resid = (w_o[0] + feats @ w_o[1:]) - y
+        tot = sw.sum()
+        var_o = float((sw * resid ** 2).sum() / tot) if tot > 0 else 0.25
+        n_o = int(y.size)
+    return LearnedPrior(w_device=w_d, w_op=w_o, ridge=float(ridge),
+                        n_device_samples=n_d, n_op_samples=n_o,
+                        device_residual_var=max(var_d, 1e-4),
+                        op_residual_var=max(var_o, 1e-4))

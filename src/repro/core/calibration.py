@@ -204,17 +204,32 @@ class ReplayRefit:
     n_ticks: int
     pre_drift: float
     post_drift: float
+    # observation evidence behind the estimates: which devices carried busy
+    # signal and how much predicted work mass each one processed over the
+    # window — the weights a belief layer (repro.belief) uses for its
+    # count-weighted posterior updates
+    signal: np.ndarray | None = None
+    obs_weight: np.ndarray | None = None
+    op_obs_weight: np.ndarray | None = None  # (n_ops,) input rows per op
+    # posterior slowdown variance AFTER this refit was written into a
+    # belief (refit_from_replay(..., belief=...)); None without a belief
+    posterior_var: np.ndarray | None = None
 
 
 def _busy_ratio(graph: OpGraph, fleet, window: ReplayWindow
-                ) -> tuple[np.ndarray, np.ndarray]:
-    """Per-device ``work_unit · slowdown_u`` estimates from the busy series
-    (and which devices carry signal).
+                ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-device ``work_unit · slowdown_u`` estimates from the busy series,
+    which devices carry signal, and how much evidence each estimate rests on.
 
     The occupancy model predicts ``busy[t, u] = work_unit · Σ_i
     work_i·rows_i(t)·x_{t,i,u} / speed_u``; with the window's observed
     per-op input rows the prediction is exact under selectivity drift,
-    otherwise rows are approximated by ``rate_t · cumulative_rate_i``."""
+    otherwise rows are approximated by ``rate_t · cumulative_rate_i``.
+
+    The returned ``weight`` is the total predicted work mass routed to each
+    device over the window — the natural observation count: a device that
+    processed 10⁴ work·rows pins its ratio, one that saw a stray 10⁻⁶ of
+    mass produces a ratio dominated by quantization noise."""
     if window.op_rows_in is not None:
         wk = np.array([op.work for op in graph.operators])
         rows = window.op_rows_in * wk[None, :]               # (T, n_ops)
@@ -232,7 +247,24 @@ def _busy_ratio(graph: OpGraph, fleet, window: ReplayWindow
     # obs/pred = work_unit·slowdown_u/believed_speed_u ⇒ multiply by the
     # believed speed to isolate work_unit·slowdown_u
     ratio[signal] = obs_u[signal] / pred_u[signal] * believed_speed[signal]
-    return ratio, signal
+    weight = np.where(signal, pred_u, 0.0)
+    return ratio, signal, weight
+
+
+def _weighted_median(values: np.ndarray, weights: np.ndarray) -> float:
+    """Median of ``values`` under ``weights`` (lower weighted median): the
+    smallest value whose cumulative weight reaches half the total.  Reduces
+    to an element of ``values`` (never an interpolation), so one noisy
+    near-zero-weight estimate cannot drag the pooled value off the
+    well-observed ones."""
+    order = np.argsort(values, kind="stable")
+    v = values[order]
+    w = weights[order]
+    total = float(w.sum())
+    if total <= 0.0:
+        return float(np.median(v))
+    k = int(np.searchsorted(np.cumsum(w), 0.5 * total))
+    return float(v[min(k, v.size - 1)])
 
 
 def fit_work_unit(graph: OpGraph, fleet, window: ReplayWindow) -> float:
@@ -243,7 +275,7 @@ def fit_work_unit(graph: OpGraph, fleet, window: ReplayWindow) -> float:
     of silently renormalizing it away (a whole-region outage where every
     mass-carrying device sits in the region looks uniform).  NaN when no
     device carries signal."""
-    ratio, signal = _busy_ratio(graph, fleet, window)
+    ratio, signal, _ = _busy_ratio(graph, fleet, window)
     if not signal.any():
         return float("nan")
     return float(np.median(ratio[signal]))
@@ -273,7 +305,7 @@ def refit_from_replay(graph: OpGraph, fleet, window: ReplayWindow,
                       cfg: CostConfig = CostConfig(),
                       work_unit: float | None = None,
                       degrade_bounds: tuple[float, float] = (0.05, 1e6),
-                      ) -> ReplayRefit:
+                      belief=None) -> ReplayRefit:
     """Re-fit the believed fleet (and operator selectivities) from observed
     replay behavior.
 
@@ -297,6 +329,13 @@ def refit_from_replay(graph: OpGraph, fleet, window: ReplayWindow,
 
     Requires ≥2 ticks (raises ValueError otherwise — the controller guards
     zero/one-tick windows and simply skips the refit).
+
+    ``belief`` (a :class:`repro.belief.BeliefState`) makes the refit WRITE
+    its observations into the belief: the per-device slowdown estimates land
+    as an observation-count-weighted posterior update (weights = predicted
+    work mass per device) and the returned refit carries the belief's
+    posterior variance after the write (``posterior_var``).  Adoption of the
+    point estimate stays the caller's decision (``belief.commit``).
     """
     if window.n_ticks < 2:
         raise ValueError(f"refit needs ≥2 ticks, got {window.n_ticks}")
@@ -305,7 +344,7 @@ def refit_from_replay(graph: OpGraph, fleet, window: ReplayWindow,
         raise ValueError(f"fleet has {fleet.n_devices} devices, window {v}")
     believed_speed = np.asarray(fleet.effective_speed(), dtype=np.float64)
     sel_scale, graph_fit = _refit_selectivities(graph, window)
-    ratio, signal = _busy_ratio(graph_fit, fleet, window)
+    ratio, signal, obs_weight = _busy_ratio(graph_fit, fleet, window)
     anchor = work_unit if work_unit is not None \
         and np.isfinite(work_unit) and work_unit > 0.0 else None
     if anchor is None and signal.any():
@@ -315,9 +354,14 @@ def refit_from_replay(graph: OpGraph, fleet, window: ReplayWindow,
         degrade[signal] = np.clip(ratio[signal] / anchor, *degrade_bounds)
     # region pooling: a device the placement put no mass on emits no busy
     # signal, but fleet failures are region-correlated (outages take whole
-    # regions down) — blind devices inherit the median estimate of their
+    # regions down) — blind devices inherit the pooled estimate of their
     # region-mates that DO carry signal, so the re-optimizer cannot dump
-    # mass onto an unobserved device of a struggling region
+    # mass onto an unobserved device of a struggling region.  The pool is
+    # an observation-WEIGHTED median: a region-mate whose "signal" is a
+    # stray sliver of mass (near-zero busy samples) contributes a ratio
+    # made of quantization noise, and with exactly one well-observed device
+    # in the region an unweighted median would average the two — diluting
+    # the only real estimate (pinned in tests/test_refit.py).
     region = getattr(fleet, "region", None)
     if region is not None and signal.any() and not signal.all():
         region = np.asarray(region)
@@ -325,7 +369,7 @@ def refit_from_replay(graph: OpGraph, fleet, window: ReplayWindow,
             sig = (region == r) & signal
             if sig.any():
                 degrade[(region == r) & ~signal] = \
-                    float(np.median(degrade[sig]))
+                    _weighted_median(degrade[sig], obs_weight[sig])
     speed = believed_speed / degrade
     # structure first: com' = com·d_u·d_v off-diagonal (diag kept)
     com = np.asarray(fleet.com_matrix(), dtype=np.float64)
@@ -350,9 +394,18 @@ def refit_from_replay(graph: OpGraph, fleet, window: ReplayWindow,
                                 region=getattr(fleet, "region", None))
     post_drift = normalized_drift(window.observed_latency,
                                   com_scale * modeled1)
-    return ReplayRefit(com_scale=com_scale, degrade=degrade, speed=speed,
-                       sel_scale=sel_scale, fleet=refit_fleet,
-                       graph=graph_fit,
-                       work_unit=float(anchor) if anchor else float("nan"),
-                       n_ticks=window.n_ticks,
-                       pre_drift=pre_drift, post_drift=post_drift)
+    op_obs_weight = None if window.op_rows_in is None \
+        else window.op_rows_in.sum(axis=0)
+    refit = ReplayRefit(com_scale=com_scale, degrade=degrade, speed=speed,
+                        sel_scale=sel_scale, fleet=refit_fleet,
+                        graph=graph_fit,
+                        work_unit=float(anchor) if anchor else float("nan"),
+                        n_ticks=window.n_ticks,
+                        pre_drift=pre_drift, post_drift=post_drift,
+                        signal=signal, obs_weight=obs_weight,
+                        op_obs_weight=op_obs_weight)
+    if belief is not None:
+        belief.update_from_refit(refit)
+        refit = dataclasses.replace(refit,
+                                    posterior_var=belief.posterior_var())
+    return refit

@@ -20,7 +20,7 @@ here and keep their signatures.
 from repro.search.candidates import (anneal_path, chunked,
                                      count_grid_states, dq_grid,
                                      grid_placements, incumbent_candidates,
-                                     random_placements,
+                                     probe_candidates, random_placements,
                                      transfer_neighborhood)
 from repro.search.decision import (ObjectiveScales, ParetoFront,
                                    candidate_values, dq_caps_mask,
@@ -28,21 +28,23 @@ from repro.search.decision import (ObjectiveScales, ParetoFront,
                                    pareto_front, pareto_mask, robust_select,
                                    scalarize, split_dq_term)
 from repro.search.engine import BatchedProblem
-from repro.search.robust import robust_placement, scenario_robust_search
+from repro.search.robust import (belief_robust_search, belief_scenarios,
+                                 robust_placement, scenario_robust_search)
 from repro.search.searchers import (exhaustive_search, greedy_transfer,
                                     random_search, simulated_annealing)
 
 __all__ = [
     # layer 1 — candidates
     "anneal_path", "chunked", "count_grid_states", "dq_grid",
-    "grid_placements", "incumbent_candidates", "random_placements",
-    "transfer_neighborhood",
+    "grid_placements", "incumbent_candidates", "probe_candidates",
+    "random_placements", "transfer_neighborhood",
     # layer 2 — batched scoring
     "BatchedProblem",
     # layer 3 — decision
     "ObjectiveScales", "ParetoFront", "candidate_values", "dq_caps_mask",
     "epsilon_constraint", "joint_dq_scores", "pareto_front", "pareto_mask",
     "robust_select", "scalarize", "split_dq_term",
+    "belief_robust_search", "belief_scenarios",
     "robust_placement", "scenario_robust_search",
     # searchers
     "exhaustive_search", "greedy_transfer", "random_search",

@@ -17,6 +17,11 @@ score each batch in a single jitted dispatch.  Sources:
   * :func:`anneal_path`            — a cumulative random-walk block of
     simulated-annealing moves (mass transfers and, when β > 0, DQ jumps)
     for one incumbent, Metropolis-walked after a single dispatch;
+  * :func:`probe_candidates`       — deterministic probing variants of an
+    incumbent that keep ε placement mass on high-uncertainty devices
+    (belief-posterior std from :mod:`repro.belief`), so the controller can
+    *buy* observations of devices its placement would otherwise never
+    touch;
   * :func:`dq_grid`                — the DQ candidate grid, which ALWAYS
     contains the incumbent ``dq_fraction`` (``include=``): the seed grid
     could regress the DQ term simply because the incumbent value was not a
@@ -41,6 +46,7 @@ __all__ = [
     "grid_placements",
     "count_grid_states",
     "incumbent_candidates",
+    "probe_candidates",
     "random_placements",
     "transfer_neighborhood",
     "anneal_path",
@@ -146,6 +152,45 @@ def incumbent_candidates(x: np.ndarray, avail: np.ndarray,
     if len(out) < n:
         out.extend(random_placements(avail, rng, n - len(out), sparsity))
     return np.stack(out[:n])
+
+
+def probe_candidates(x: np.ndarray, avail: np.ndarray,
+                     uncertainty: np.ndarray, epsilon: float,
+                     top_k: int = 2) -> np.ndarray:
+    """(top_k, n_ops, V) probing variants of the incumbent: variant k moves
+    ε of every operator's mass onto the k most-uncertain devices (mass
+    split ∝ posterior std among them, masked per-op by availability).
+
+    Deterministic — no rng — so probing perturbs neither the controller's
+    candidate stream nor reproducibility, and it costs ZERO extra
+    dispatches: the variants ride in the same ``score_grid`` batch as the
+    incumbent candidates.  A probe is only adopted when the robust
+    objective (plus the exploration bonus the controller applies) says the
+    information is worth its price.  With ``epsilon <= 0``, no uncertainty
+    signal, or nothing available, the batch is empty."""
+    x = np.asarray(x, dtype=np.float64)
+    std = np.asarray(uncertainty, dtype=np.float64)
+    if epsilon <= 0.0 or top_k < 1 or not np.any(std > 0.0):
+        return np.empty((0,) + x.shape)
+    eps = float(np.clip(epsilon, 0.0, 1.0))
+    # most-uncertain devices first; stable sort keeps ties index-ordered
+    order = np.argsort(-std, kind="stable")
+    out = []
+    for k in range(1, top_k + 1):
+        chosen = order[:k]
+        weights = np.zeros(std.size)
+        weights[chosen] = std[chosen]
+        # per-op availability mask + renormalization: an op that can run on
+        # none of the probe targets keeps its incumbent row
+        target = np.asarray(avail, dtype=np.float64) * weights[None, :]
+        mass = target.sum(axis=1, keepdims=True)
+        target = np.divide(target, mass, out=np.zeros_like(target),
+                           where=mass > 0.0)
+        movable = mass[:, 0] > 0.0
+        cand = x.copy()
+        cand[movable] = (1.0 - eps) * x[movable] + eps * target[movable]
+        out.append(cand)
+    return np.stack(out)
 
 
 def transfer_neighborhood(x: np.ndarray, avail: np.ndarray, op: int,

@@ -14,6 +14,7 @@ from repro.sim.scenarios import (MIN_ALIVE_DEVICES, Scenario, ScenarioConfig,
                                  random_fleet, random_graph, random_scenario,
                                  random_trace, region_fleet_family,
                                  region_scenario_batch, scenario_batch)
+from repro.sim.training import TrainingTuples, merge_tuples, training_tuples
 
 __all__ = [
     "BatchedEvaluator", "pack_fleets", "pack_placements", "pack_region_fleets",
@@ -26,4 +27,5 @@ __all__ = [
     "diurnal_rate", "perturbed_fleet", "random_fleet", "random_graph",
     "random_scenario", "random_trace", "region_fleet_family",
     "region_scenario_batch", "scenario_batch",
+    "TrainingTuples", "merge_tuples", "training_tuples",
 ]

@@ -1,7 +1,14 @@
 """Closed-loop adaptive replay: the controller chases drift on a crafted
 trace, survives the replay edge cases (zero/one-tick traces, removal floor,
 back-to-back whole-region outages), keeps its dispatch count O(reconfigs),
-and is deterministic under a fixed seed."""
+and is deterministic under a fixed seed.
+
+Belief handoff (PR 10): with uncertainty disabled and the prior set to the
+base fleet, the belief-enabled controller reproduces the legacy
+RegretReport BITWISE; with a learned prior it beats the blind controller on
+a cold-start fixture."""
+
+import dataclasses
 
 import numpy as np
 import pytest
@@ -198,6 +205,116 @@ def test_controller_is_deterministic_under_fixed_seed():
     np.testing.assert_array_equal(a.f_oracle, b.f_oracle)
     np.testing.assert_array_equal(a.reconfig_costs, b.reconfig_costs)
     assert a.controller_dispatches == b.controller_dispatches
+
+
+def _bitwise_equal_reports(a: RegretReport, b: RegretReport) -> None:
+    assert a.reconfig_ticks == b.reconfig_ticks
+    assert a.refit_ticks == b.refit_ticks
+    assert a.controller_dispatches == b.controller_dispatches
+    assert a.final_com_scale == b.final_com_scale
+    np.testing.assert_array_equal(a.f_adaptive, b.f_adaptive)
+    np.testing.assert_array_equal(a.f_static, b.f_static)
+    np.testing.assert_array_equal(a.f_oracle, b.f_oracle)
+    np.testing.assert_array_equal(a.reconfig_costs, b.reconfig_costs)
+    np.testing.assert_array_equal(a.drift, b.drift)
+
+
+def test_belief_off_uncertainty_reproduces_legacy_bitwise():
+    """use_belief=True with no prior, no posterior sampling and no probing
+    is passive bookkeeping: the belief state updates alongside the run but
+    touches neither the rng stream nor any decision — the RegretReport is
+    BITWISE identical to the legacy controller on the crafted-outage
+    fixture (the PR 5 differential guarantee)."""
+    reps = []
+    for cfg in (CTL, dataclasses.replace(CTL, use_belief=True)):
+        eng, _ = _engine(0)
+        trace = _outage_trace(region=int(np.asarray(eng.fleet.region)[0]))
+        reps.append(run_adaptive(eng, trace, np.random.default_rng(1), cfg))
+    _bitwise_equal_reports(*reps)
+
+
+# -- cold start: learned prior vs blind controller -----------------------------
+
+def _snapshot_fleet(fleet):
+    from repro.core.devices import ExplicitFleet
+
+    return ExplicitFleet(
+        com_cost=np.asarray(fleet.com_matrix(), dtype=np.float64).copy(),
+        speed=np.asarray(fleet.effective_speed(), dtype=np.float64).copy(),
+        region=np.asarray(fleet.region).copy())
+
+
+def _slow_tier_devices(fleet) -> np.ndarray:
+    from repro.belief import speed_percentile
+
+    pct = speed_percentile(np.asarray(fleet.effective_speed()))
+    return np.flatnonzero(pct < 1.0 / 3.0)
+
+
+def _slow_tier_trace(fleet, factor: float, n_ticks: int) -> list[TraceEvent]:
+    """The cold-start world: the fleet's slow speed tier runs ``factor``×
+    slower from tick 0 — a FEATURE-correlated truth a transferable prior
+    can predict for devices it never observed."""
+    events = [TraceEvent(t=0, kind="degrade", rate=0.0, device=int(u),
+                         factor=factor)
+              for u in _slow_tier_devices(fleet)]
+    return events + _rate_ticks(0, n_ticks)
+
+
+def _train_slow_tier_prior(factor: float, seeds=(10, 11, 12)):
+    """Harvest training tuples from replay traces of OTHER fleets (the
+    tuples replay generates for free) and fit the ridge prior on them."""
+    from repro.core.calibration import ReplayWindow
+    from repro.belief import fit_prior
+    from repro.sim import merge_tuples, training_tuples
+
+    parts = []
+    for seed in seeds:
+        eng, _ = _engine(seed)
+        base = _snapshot_fleet(eng.fleet)
+        trace = _slow_tier_trace(eng.fleet, factor, n_ticks=6)
+        rep = replay_trace(eng, trace, np.random.default_rng(seed))
+        window = ReplayWindow.from_report(rep, eng.x)
+        parts.append(training_tuples(eng.graph.meta, base, window))
+    corpus = merge_tuples(parts)
+    return fit_prior(device_features=corpus.device_features,
+                     device_log_degrade=corpus.device_log_degrade,
+                     device_weights=corpus.device_weights)
+
+
+def test_cold_start_belief_prior_beats_blind_adaptive():
+    """Cold-start acceptance: a never-observed fleet whose slow tier is
+    degraded from tick 0.  The blind controller must wait for a drift
+    window before reacting; the belief controller's learned prior prices
+    the slow tier up front and re-optimizes at the first tick — strictly
+    lower cumulative true-F regret (vs its own oracle)."""
+    factor = 8.0
+    prior = _train_slow_tier_prior(factor)
+    pred = prior.predict_degrade  # sanity: the prior actually learned tiers
+    # both controllers amortize over the same (default) horizon — the CTL
+    # fixture's tight 8-tick budget is for the outage tests above
+    blind_cfg = dataclasses.replace(CTL, amortize_ticks=20.0)
+    belief_cfg = dataclasses.replace(blind_cfg, use_belief=True,
+                                     belief_sampling=True)
+    reports = {}
+    for name, cfg, pr in (("blind", blind_cfg, None),
+                          ("belief", belief_cfg, prior)):
+        eng, _ = _engine(6)
+        if pr is not None:
+            from repro.belief import device_features
+            feats = device_features(eng.fleet)
+            slow = _slow_tier_devices(eng.fleet)
+            assert np.min(pred(feats)[slow]) > 2.0  # tier recognized
+        trace = _slow_tier_trace(eng.fleet, factor, n_ticks=32)
+        reports[name] = run_adaptive(eng, trace, np.random.default_rng(2),
+                                     cfg, prior=pr)
+    # regret against the best hindsight floor EITHER run found — the
+    # per-run oracle consumes a different rng stream, so comparing each
+    # policy to its own oracle would reward oracle luck, not the policy
+    floor = min(r.cum_oracle for r in reports.values())
+    regrets = {k: r.cum_adaptive - floor for k, r in reports.items()}
+    assert regrets["belief"] < regrets["blind"]
+    assert reports["belief"].cum_adaptive < reports["blind"].cum_adaptive
 
 
 def test_reconfiguration_cost_properties():

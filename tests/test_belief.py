@@ -1,0 +1,236 @@
+"""Property battery for the belief layer (repro.belief): the learned prior
+recovers planted ground truth from synthetic traces, the posterior variance
+is monotone in observation count and re-inflates under age decay, the
+featurization is identity-free (device reindexing permutes feature rows),
+and zero-observation devices return EXACTLY the prior mean."""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # container lacks hypothesis — use the shim
+    from repro.testing.propcheck import given, settings, strategies as st
+
+from repro.belief import (BeliefState, device_features, fit_prior,
+                          op_features, speed_percentile)
+from repro.core.calibration import ReplayWindow
+from repro.core.devices import ExplicitFleet
+from repro.core.graph import Operator, OpGraph
+from repro.sim import merge_tuples, training_tuples
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+# -- synthetic-trace harness ---------------------------------------------------
+
+def _chain_graph() -> OpGraph:
+    ops = [Operator("source", selectivity=1.0, out_bytes=4.0, work=1.0),
+           Operator("map", selectivity=1.0, out_bytes=8.0, work=2.0),
+           Operator("filter", selectivity=0.5, out_bytes=4.0, work=1.0)]
+    return OpGraph(ops, [(0, 1), (1, 2)])
+
+
+def _random_fleet(rng: np.random.Generator, v: int = 6) -> ExplicitFleet:
+    com = rng.uniform(0.5, 2.0, (v, v))
+    com = (com + com.T) / 2
+    np.fill_diagonal(com, 0.0)
+    speed = rng.uniform(0.5, 4.0, v)
+    region = np.arange(v) // 2
+    return ExplicitFleet(com_cost=com, speed=speed, region=region)
+
+
+def _planted_degrade(fleet, slow_factor: float) -> np.ndarray:
+    """Ground truth tied to a FEATURE (the bottom speed tier), not to device
+    ids — the only kind of truth a transferable prior can learn."""
+    pct = speed_percentile(np.asarray(fleet.effective_speed()))
+    return np.where(pct < 1.0 / 3.0, slow_factor, 1.0)
+
+
+def _synthetic_window(graph, fleet, d_true, sel_scale_true,
+                      work_unit: float = 1e-3, t_ticks: int = 6,
+                      rate: float = 64.0) -> ReplayWindow:
+    """Forward-simulate the occupancy model: the busy series a fleet with
+    planted slowdowns and selectivity drift would emit under a uniform
+    placement — the (placement, fleet, observed-cost) tuples replay traces
+    generate, without paying for an engine."""
+    v = fleet.n_devices
+    n_ops = graph.n_ops
+    x = np.full((n_ops, v), 1.0 / v)
+    rates = np.full(t_ticks, rate)
+    sel_true = np.array([op.selectivity for op in graph.operators]) \
+        * sel_scale_true
+    rows_in = np.empty((t_ticks, n_ops))
+    rows_out = np.empty((t_ticks, n_ops))
+    for i in range(n_ops):
+        parents = [a for a, b in graph.edges if b == i]
+        rows_in[:, i] = rates if not parents \
+            else np.sum([rows_out[:, a] for a in parents], axis=0)
+        rows_out[:, i] = rows_in[:, i] * sel_true[i]
+    wk = np.array([op.work for op in graph.operators])
+    load = np.einsum("ti,iu->tu", rows_in * wk[None, :], x)
+    speed = np.asarray(fleet.effective_speed(), dtype=np.float64)
+    busy = work_unit * load * (d_true / speed)[None, :]
+    return ReplayWindow(rates=rates, busy=busy,
+                        observed_latency=busy.max(axis=1), xs=x,
+                        op_rows_in=rows_in, op_rows_out=rows_out)
+
+
+# -- satellite 1: the four required properties ---------------------------------
+
+def test_prior_recovers_planted_degrade_and_selectivity():
+    """Fit on synthetic traces from training fleets, predict a HELD-OUT
+    fleet: the recovered slowdowns and selectivity scales match the planted
+    ground truth within tolerance (the truth is a function of features, so
+    transfer to unseen devices is exactly what is being tested)."""
+    graph = _chain_graph()
+    slow, sel_scale = 6.0, np.array([1.0, 1.0, 1.4])
+    parts = []
+    for seed in range(6):
+        fleet = _random_fleet(np.random.default_rng(seed))
+        d_true = _planted_degrade(fleet, slow)
+        window = _synthetic_window(graph, fleet, d_true, sel_scale)
+        parts.append(training_tuples(graph, fleet, window, work_unit=1e-3))
+    corpus = merge_tuples(parts)
+    assert corpus.n_device_rows > 0 and corpus.n_op_rows > 0
+    prior = fit_prior(device_features=corpus.device_features,
+                      device_log_degrade=corpus.device_log_degrade,
+                      device_weights=corpus.device_weights,
+                      op_features=corpus.op_features,
+                      op_log_sel_scale=corpus.op_log_sel_scale,
+                      op_weights=corpus.op_weights)
+    held_out = _random_fleet(np.random.default_rng(99))
+    pred = prior.predict_degrade(device_features(held_out))
+    np.testing.assert_allclose(pred, _planted_degrade(held_out, slow),
+                               rtol=0.15)
+    pred_sel = prior.predict_sel_scale(op_features(graph))
+    np.testing.assert_allclose(pred_sel, sel_scale, rtol=0.15)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4),
+       st.floats(0.1, 0.9))
+@settings(**SETTINGS)
+def test_posterior_variance_monotone_and_decay(seed, n_rounds, decay):
+    """More observations ⇒ posterior variance non-increasing (elementwise);
+    age decay ⇒ variance increases again wherever evidence existed."""
+    rng = np.random.default_rng(seed)
+    fleet = _random_fleet(rng)
+    b = BeliefState.from_fleet(fleet)
+    var = b.posterior_var()
+    np.testing.assert_array_equal(var, b.prior_var)  # zero obs = full prior
+    for _ in range(n_rounds):
+        w = rng.uniform(0.0, 2.0, fleet.n_devices)
+        b.observe(rng.normal(size=fleet.n_devices), w)
+        new_var = b.posterior_var()
+        assert np.all(new_var <= var + 1e-15)
+        assert np.all(new_var[w > 0] < var[w > 0])
+        var = new_var
+    b.decay(decay)
+    decayed = b.posterior_var()
+    assert np.all(decayed >= var - 1e-15)
+    assert np.all(decayed[b.obs_count > 0] > var[b.obs_count > 0])
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_featurization_invariant_to_device_reindexing(seed):
+    """Permuting devices permutes the feature rows by exactly the same
+    permutation — features follow values (speed, region aggregates), never
+    indices.  Within-region reindexing is the special case where the region
+    vector is unchanged."""
+    rng = np.random.default_rng(seed)
+    fleet = _random_fleet(rng)
+    perm = rng.permutation(fleet.n_devices)
+    permuted = ExplicitFleet(
+        com_cost=np.asarray(fleet.com_matrix())[np.ix_(perm, perm)],
+        speed=np.asarray(fleet.effective_speed())[perm],
+        region=np.asarray(fleet.region)[perm])
+    np.testing.assert_allclose(device_features(permuted),
+                               device_features(fleet)[perm], atol=1e-12)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_zero_observation_devices_return_exactly_prior_mean(seed):
+    """Devices that were never observed return the prior mean EXACTLY
+    (bitwise ==, not approximately) — partial observation of the fleet must
+    not leak into the unobserved entries."""
+    rng = np.random.default_rng(seed)
+    fleet = _random_fleet(rng)
+    v = fleet.n_devices
+    b = BeliefState.from_fleet(fleet)
+    b.prior_mean_log = rng.normal(size=v)  # arbitrary prior
+    observed = rng.random(v) < 0.5
+    w = np.where(observed, rng.uniform(0.5, 2.0, v), 0.0)
+    b.observe(rng.normal(size=v), w)
+    mean = b.posterior_mean_log()
+    assert np.array_equal(mean[~observed], b.prior_mean_log[~observed])
+    if observed.any():
+        assert not np.array_equal(mean[observed],
+                                  b.prior_mean_log[observed])
+    var = b.posterior_var()
+    assert np.array_equal(var[~observed], b.prior_var[~observed])
+
+
+# -- supporting invariants -----------------------------------------------------
+
+def test_belief_absolute_anchoring_across_commits():
+    """Observations arrive as degrades RELATIVE to the believed fleet;
+    cum_log anchors them absolutely, so the posterior mean is invariant to
+    WHERE the commit boundary fell."""
+    fleet = _random_fleet(np.random.default_rng(3))
+    v = fleet.n_devices
+    truth = np.log(np.linspace(1.0, 3.0, v))
+    # one shot: the full slowdown observed against the base fleet
+    one = BeliefState.from_fleet(fleet)
+    one.observe(one.cum_log + truth, np.ones(v))
+    # split: half the slowdown adopted (commit), the remainder then
+    # observed RELATIVE to the committed state — the anchored observation
+    # cum_log + log(rel) reconstructs the same absolute value
+    split = BeliefState.from_fleet(fleet)
+    first = np.exp(truth) ** 0.5
+    split.commit(first)
+    rel = np.exp(truth) / first
+    split.observe(split.cum_log + np.log(rel), np.ones(v))
+    np.testing.assert_allclose(split.est_log, one.est_log)
+    np.testing.assert_allclose(split.posterior_mean_log(),
+                               one.posterior_mean_log())
+
+
+def test_sample_fleets_shrink_with_observation():
+    """Posterior sampling spread collapses on well-observed devices and
+    stays wide on never-observed ones — the property that makes belief
+    sampling beat fixed jitter."""
+    fleet = _random_fleet(np.random.default_rng(4))
+    v = fleet.n_devices
+    b = BeliefState.from_fleet(fleet)
+    w = np.zeros(v)
+    w[: v // 2] = 50.0  # first half heavily observed
+    b.observe(np.zeros(v), w)
+    rel = b.sample_degrade_rel(np.random.default_rng(0), 256)
+    spread = np.log(rel).std(axis=0)
+    assert spread[: v // 2].max() < spread[v // 2:].min()
+    fleets = b.sample_fleets(fleet, np.random.default_rng(1), 3)
+    assert len(fleets) == 3 and fleets[0].n_devices == v
+
+
+def test_probe_candidates_target_uncertain_devices():
+    from repro.search import probe_candidates
+
+    n_ops, v = 3, 5
+    x = np.zeros((n_ops, v))
+    x[:, 0] = 1.0  # incumbent concentrates on device 0
+    std = np.array([0.0, 0.0, 0.0, 0.5, 0.2])
+    avail = np.ones((n_ops, v), bool)
+    probes = probe_candidates(x, avail, std, epsilon=0.1, top_k=2)
+    assert probes.shape == (2, n_ops, v)
+    np.testing.assert_allclose(probes.sum(axis=2), 1.0)  # still placements
+    # variant 0 probes only the most-uncertain device (3)
+    assert probes[0][:, 3] == pytest.approx(0.1)
+    assert probes[0][:, 4] == pytest.approx(0.0)
+    # variant 1 splits ε over devices 3 and 4 ∝ their std
+    assert probes[1][:, 3] == pytest.approx(0.1 * 0.5 / 0.7)
+    assert probes[1][:, 4] == pytest.approx(0.1 * 0.2 / 0.7)
+    # no uncertainty or no epsilon ⇒ empty batch
+    assert probe_candidates(x, avail, np.zeros(v), 0.1).shape[0] == 0
+    assert probe_candidates(x, avail, std, 0.0).shape[0] == 0

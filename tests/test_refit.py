@@ -126,6 +126,45 @@ def test_refit_region_pooling_covers_blind_devices():
     assert refit.degrade[5] == pytest.approx(16.0, rel=0.15)
 
 
+def test_refit_pooling_weights_by_observation_count():
+    """Two observed devices in a degraded region: one with real load (true
+    ratio 16×), one with a 1e-9 sliver of placement mass whose busy samples
+    are quantization noise (ratio looks healthy).  The blind region-mate
+    must inherit ≈16 from the WELL-observed device — an unweighted median
+    would average the two estimates (→ ~8.5) and dilute the only real one."""
+    rng = np.random.default_rng(7)
+    graph = _chain_graph(3)
+    v = 4
+    base = _base_fleet(rng, v)
+    base = ExplicitFleet(com_cost=base.com_cost,
+                         region=np.array([0, 0, 0, 1]))
+    d_true = np.array([16.0, 16.0, 16.0, 1.0])
+    t = 8
+    xs = np.zeros((t, graph.n_ops, v))
+    xs[:, :, 0] = 0.5 - 1e-9   # well observed, degraded
+    xs[:, :, 1] = 1e-9         # sliver of mass, same region
+    xs[:, :, 3] = 0.5          # healthy anchor region
+    rates = np.full(t, 200.0)
+    cum = graph.cumulative_rates()
+    wk = np.array([op.work * cum[i]
+                   for i, op in enumerate(graph.operators)])
+    busy = 1e-6 * np.einsum("i,tiu->tu", wk, xs) \
+        * rates[:, None] * d_true[None, :]
+    # the sliver device's busy is quantization noise — it reads HEALTHY
+    # even though its region runs 16× slow
+    busy[:, 1] /= 16.0
+    window = ReplayWindow(rates=rates, busy=busy,
+                          observed_latency=busy.max(axis=1), xs=xs)
+    refit = refit_from_replay(graph, base, window)
+    assert refit.degrade[0] == pytest.approx(16.0, rel=0.1)
+    # blind device 2 pools the work-mass-weighted estimate, not the average
+    assert refit.degrade[2] == pytest.approx(16.0, rel=0.15)
+    # the evidence fields expose exactly what the pool used
+    assert refit.signal is not None and refit.obs_weight is not None
+    assert bool(refit.signal[1]) and not bool(refit.signal[2])
+    assert refit.obs_weight[0] > 1e6 * refit.obs_weight[1]
+
+
 def test_refit_selectivity_from_row_counters():
     """With per-op row counters the refit graph carries the observed
     selectivities, not the nominal ones."""
